@@ -1,0 +1,41 @@
+"""Paper Figs 3 & 4: NCCL all_reduce bandwidth vs message size and vs GPU
+count for TCP / RoCE / GDR — reproduced from the calibrated α–β network model
+(core/netmodel.py).  Validation targets from the paper's text:
+  * 8 MB @ 1024 GPUs: GDR ≈ 10× TCP
+  * >= 500 MB: GDR 20–30 GB/s busbw vs TCP ~6 GB/s (3–5×)
+"""
+import time
+
+from repro.core import netmodel as nm
+
+SIZES = [1e6, 8e6, 64e6, 256e6, 500e6, 1e9, 2e9]
+COUNTS = [32, 64, 128, 256, 512, 1024, 1752]
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    # Fig 3: bandwidth vs message size @ 1024 GPUs
+    for proto in (nm.TCP, nm.ROCE, nm.GDR):
+        for m in SIZES:
+            bw = nm.bus_bandwidth(m, 1024, proto)
+            rows.append((f"fig3/allreduce_busbw/{proto.name}/{int(m/1e6)}MB",
+                         nm.allreduce_time(m, 1024, proto) * 1e6,
+                         f"{bw/1e9:.2f}GBps"))
+    # Fig 4: scaling vs GPU count @ 512 MB
+    for proto in (nm.GDR, nm.ROCE):
+        for n in COUNTS:
+            bw = nm.bus_bandwidth(512e6, n, proto)
+            rows.append((f"fig4/allreduce_scaling/{proto.name}/{n}gpu",
+                         nm.allreduce_time(512e6, n, proto) * 1e6,
+                         f"{bw/1e9:.2f}GBps"))
+    # headline validations
+    r_small = (nm.alg_bandwidth(8e6, 1024, nm.GDR)
+               / nm.alg_bandwidth(8e6, 1024, nm.TCP))
+    r_big = (nm.alg_bandwidth(500e6, 1024, nm.GDR)
+             / nm.alg_bandwidth(500e6, 1024, nm.TCP))
+    assert 6 <= r_small <= 14 and 3 <= r_big <= 6, (r_small, r_big)
+    rows.append(("fig3/validate/gdr_vs_tcp@8MB",
+                 (time.perf_counter() - t0) * 1e6, f"{r_small:.1f}x"))
+    rows.append(("fig3/validate/gdr_vs_tcp@500MB", 0.0, f"{r_big:.1f}x"))
+    return rows

@@ -1,0 +1,84 @@
+"""Paper Tables 2 & 4: training throughput.  Wall time cannot be measured on
+CPU, so throughput is the roofline bound from the compiled dry-run artifacts
+(max of compute/memory/collective terms per step on the v5e production mesh),
+reported as tokens/day and TFLOP/s/chip with the paper's A100/H100 reference
+MFUs alongside.
+
+Paper reference points:
+  * Megatron paper: 135–142 TFLOP/s/GPU on A100 (43–46% MFU) for 8–20B
+  * Vela Granite-13B: 140 TFLOP/s/GPU on 256 GPUs (45% MFU)
+  * BloombergGPT replica on Vela: 160 TFLOP/s (51%) vs their 101 (32%)
+"""
+import json
+from pathlib import Path
+
+from repro.roofline.analysis import PEAK_FLOPS, from_record
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def _load(mesh: str, arch: str, shape: str, tag: str = ""):
+    suffix = f"__{tag}" if tag else ""
+    p = DRYRUN / mesh / f"{arch}__{shape}{suffix}.json"
+    if not p.exists():
+        return None
+    rec = json.loads(p.read_text())
+    return rec if rec.get("ok") else None
+
+
+def run():
+    rows = []
+    paper_points = {  # model -> (paper TFLOP/s/GPU, peak, label)
+        "granite-13b": (140.0, 312.0, "vela_a100"),
+        "granite-8b": (140.0, 312.0, "vela_a100"),
+        "granite-20b-code": (138.0, 312.0, "megatron_ref_a100"),
+    }
+    for arch in ("granite-8b", "granite-13b", "granite-20b-code"):
+        rec = _load("pod16x16", arch, "train_4k")
+        if rec is None:
+            rows.append((f"table2/{arch}", 0.0, "dryrun_missing"))
+            continue
+        r = from_record(rec)
+        step_s = r.bound_s
+        tokens_day = r.tokens_per_step / step_s * 86400
+        tflops_chip = (r.model_flops_global / r.chips) / step_s / 1e12
+        mfu = tflops_chip * 1e12 / PEAK_FLOPS
+        rows.append((f"table2/{arch}/roofline_step", step_s * 1e6,
+                     f"{r.dominant}-bound"))
+        rows.append((f"table2/{arch}/tokens_per_day", 0.0,
+                     f"{tokens_day/1e9:.0f}B"))
+        rows.append((f"table2/{arch}/TFLOPs_per_chip", 0.0,
+                     f"{tflops_chip:.0f}({mfu*100:.0f}%MFU_v5e)"))
+        if arch in paper_points:
+            ref, peak, label = paper_points[arch]
+            rows.append((f"table2/{arch}/paper_ref", 0.0,
+                         f"{ref:.0f}TFLOPs({ref/peak*100:.0f}%MFU_{label})"))
+
+    # Table 4 analogue: assigned-arch throughputs at the roofline bound,
+    # baseline (paper-faithful uniform sharding) AND the §Perf-optimized
+    # variants reported separately
+    optimized_tags = {
+        "llama3-405b": "it4_fh_revertmask",
+        "arctic-480b": "it3_epmoe_split",
+        "zamba2-1.2b": "it1_sepconv",
+    }
+    for arch, shape in (("llama3-405b", "train_4k"),
+                        ("arctic-480b", "train_4k"),
+                        ("zamba2-1.2b", "train_4k"),
+                        ("moonshot-v1-16b-a3b", "train_4k"),
+                        ("qwen3-4b", "train_4k")):
+        for tag in ("baseline", optimized_tags.get(arch)):
+            if tag is None:
+                continue
+            rec = _load("pod16x16", arch, shape,
+                        tag="" if tag == "baseline" else tag)
+            if rec is None:
+                continue
+            r = from_record(rec)
+            tokens_day = r.tokens_per_step / r.bound_s * 86400
+            label = "baseline" if tag == "baseline" else "optimized"
+            rows.append((f"table4/{arch}/{label}/tokens_per_day",
+                         r.bound_s * 1e6,
+                         f"{tokens_day/1e9:.1f}B_{r.dominant}-bound_"
+                         f"mfu{r.mfu_bound*100:.1f}%"))
+    return rows

@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract)."""
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_allreduce, bench_checkpoint, bench_failures,
+                        bench_overhead, bench_parallel_plan,
+                        bench_perf_iterations, bench_storage,
+                        bench_throughput)
+
+MODULES = [
+    ("fig3_fig4_allreduce", bench_allreduce),
+    ("fig7_storage", bench_storage),
+    ("s2_3_3_checkpoint", bench_checkpoint),
+    ("fig5_6_8_overhead", bench_overhead),
+    ("table1_failures", bench_failures),
+    ("s2_4_parallel_plan", bench_parallel_plan),
+    ("table2_table4_throughput", bench_throughput),
+    ("perf_hillclimb", bench_perf_iterations),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, mod in MODULES:
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{label}/ERROR,0.0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        print(f"{label}/total,{(time.perf_counter()-t0)*1e6:.1f},ok")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Elastic scaling demo: a job checkpointed on one mesh restarts on a smaller
+mesh (node shortage after failures) with identical weights, then scales back
+up — the checkpoint reshard makes gang-size changes transparent.
+
+    PYTHONPATH=src python examples/elastic_scaling.py
+(uses 8 virtual host devices; run standalone, not under the test process)
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import CONFIGS, TrainConfig
+from repro.core import GangScheduler, Job, SimCluster, load_checkpoint, \
+    save_checkpoint
+from repro.models import LM, ForwardOpts, make_batch
+from repro.parallel.mesh import make_mesh
+from repro.parallel.sharding import (default_rules, logical_to_sharding,
+                                     sharding_context)
+from repro.train import (abstract_train_state, init_train_state,
+                         make_train_step, train_state_logical_axes)
+
+
+def run_steps(lm, tcfg, opts, state, mesh_shape, n_steps, cfg, start):
+    mesh = make_mesh(mesh_shape, ("data", "model"))
+    rules = default_rules(mesh.axis_names)
+    sh = logical_to_sharding(train_state_logical_axes(lm),
+                             abstract_train_state(lm), mesh, rules)
+    step = make_train_step(lm, tcfg, opts)
+
+    def wrapped(s, b):
+        with sharding_context(mesh, rules):
+            return step(s, b)
+
+    fn = jax.jit(wrapped, in_shardings=(sh, None), out_shardings=(sh, None))
+    with mesh:
+        state = jax.device_put(state, sh)
+        for i in range(start, start + n_steps):
+            state, m = fn(state, make_batch(cfg, 8, 64, rng=i))
+        print(f"  mesh {mesh_shape}: steps {start}..{start+n_steps-1}, "
+              f"loss {float(m['loss']):.4f}")
+    return jax.tree.map(np.asarray, state)
+
+
+def main():
+    cfg = dataclasses.replace(CONFIGS["qwen3-4b"].reduced(), dtype="float32")
+    lm = LM(cfg)
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=4, total_steps=40)
+    opts = ForwardOpts(attn_impl="dense", remat="none")
+    state = init_train_state(lm, jax.random.key(0), tcfg)
+    ckpt = tempfile.mkdtemp()
+
+    # the scheduler decides the resize when capacity drops
+    cluster = SimCluster(8, seed=0)
+    sched = GangScheduler(cluster, buffer_fraction=0.0)
+    job = Job("train", 8)
+    sched.submit(job)
+
+    print("phase 1: full mesh (4x2)")
+    state = run_steps(lm, tcfg, opts, state, (4, 2), 6, cfg, 0)
+    save_checkpoint(ckpt, state, 6)
+
+    print("phase 2: two nodes lost -> elastic downsize to (2x2)")
+    from repro.core import FailureKind
+    cluster.inject(6, FailureKind.HOST_CRASH)
+    cluster.inject(7, FailureKind.HOST_CRASH)
+    sched.elastic_resize("train", 4)
+    restored, s = load_checkpoint(ckpt, template=state)
+    state = run_steps(lm, tcfg, opts, restored, (2, 2), 6, cfg, s)
+    save_checkpoint(ckpt, state, 12)
+
+    print("phase 3: nodes repaired -> scale back up to (4x2)")
+    restored, s = load_checkpoint(ckpt, template=state)
+    state = run_steps(lm, tcfg, opts, restored, (4, 2), 6, cfg, s)
+    print("OK: one job, three gang sizes, continuous loss trajectory")
+
+
+if __name__ == "__main__":
+    main()

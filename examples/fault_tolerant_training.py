@@ -1,0 +1,71 @@
+"""Fault-tolerant training demo (the paper's §2.3 end to end):
+
+1. REAL run: a CPU training job crashes twice mid-run and resumes from
+   Young-interval checkpoints with an identical loss trajectory.
+2. SIMULATED fleet: a Granite-20B-class job (96 nodes + 10% buffer) over the
+   paper's failure rates — host crashes, power-brake stragglers, PCIe
+   degradation — with autopilot detection, Slack-style alerts, node swaps,
+   and <10% lost time.
+
+    PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+import dataclasses
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+
+from repro.configs import CONFIGS, TrainConfig
+from repro.core import (AlertManager, FTTrainLoop, MetricsRegistry, SlackSink,
+                        simulate_job)
+from repro.models import LM, ForwardOpts, make_batch
+from repro.train import init_train_state, make_train_step
+
+
+def real_run(tmp="/tmp/repro_ft_demo"):
+    print("=== 1. real run with injected crashes ===")
+    cfg = dataclasses.replace(CONFIGS["granite-8b"].reduced(),
+                              dtype="float32", num_layers=2)
+    lm = LM(cfg)
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=4, total_steps=30)
+    opts = ForwardOpts(attn_impl="dense", remat="none")
+    state = init_train_state(lm, jax.random.key(0), tcfg)
+    step = jax.jit(make_train_step(lm, tcfg, opts))
+    batches = lambda s: make_batch(cfg, 4, 48, rng=s)
+
+    import shutil
+    for d in ("clean", "faulty"):
+        shutil.rmtree(f"{tmp}/{d}", ignore_errors=True)
+    clean = FTTrainLoop(step, state, f"{tmp}/clean", ckpt_every=8)
+    clean.run(batches, 30)
+    faulty = FTTrainLoop(step, state, f"{tmp}/faulty", ckpt_every=8)
+    faulty.run(batches, 30, fail_at=lambda s: s in (11, 21))
+    print(f"  crashes survived: {faulty.restarts}")
+    a = {m['step']: m['loss'] for m in clean.metrics_log}
+    b = {m['step']: m['loss'] for m in faulty.metrics_log}
+    drift = max(abs(a[s] - b[s]) for s in a)
+    print(f"  max loss drift vs failure-free run: {drift:.2e}")
+    assert drift < 1e-4
+    print("  OK: trajectory identical after checkpoint restarts\n")
+
+
+def simulated_fleet():
+    print("=== 2. simulated 96-node Granite-class job (46 days scale) ===")
+    reg = MetricsRegistry()
+    rep = simulate_job(n_cluster_nodes=106, job_nodes=96,
+                       total_steps=150_000, base_step_time=5.0,
+                       ckpt_write_seconds=90.0, seed=5, registry=reg)
+    print(" ", rep.summary())
+    print(f"  checkpoint interval (Young): {rep.checkpoint_interval_steps} "
+          f"steps")
+    print(f"  failures injected: "
+          f"{ {k: v for k, v in rep.failures.items() if v} }")
+    assert rep.lost_fraction < 0.10
+    print("  OK: <10% of wall time lost (paper claim)")
+
+
+if __name__ == "__main__":
+    real_run()
+    simulated_fleet()

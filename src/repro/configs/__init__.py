@@ -1,0 +1,43 @@
+"""Config registry: ``get_config(name)`` / ``--arch <id>`` resolution."""
+from repro.configs.base import (ModelConfig, ParallelConfig, RunConfig,
+                                ShapeConfig, TrainConfig)
+from repro.configs.shapes import SHAPES, applicable, get_shape
+
+from repro.configs.arctic_480b import CONFIG as _arctic
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as _moonshot
+from repro.configs.zamba2_1_2b import CONFIG as _zamba2
+from repro.configs.llama3_2_3b import CONFIG as _llama32
+from repro.configs.starcoder2_3b import CONFIG as _starcoder2
+from repro.configs.llama3_405b import CONFIG as _llama405
+from repro.configs.qwen3_4b import CONFIG as _qwen3
+from repro.configs.rwkv6_1_6b import CONFIG as _rwkv6
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
+from repro.configs.internvl2_2b import CONFIG as _internvl
+from repro.configs.granite import GRANITE_8B, GRANITE_13B, GRANITE_20B
+
+ASSIGNED_ARCHS = {
+    c.name: c
+    for c in (_arctic, _moonshot, _zamba2, _llama32, _starcoder2,
+              _llama405, _qwen3, _rwkv6, _seamless, _internvl)
+}
+
+PAPER_ARCHS = {c.name: c for c in (GRANITE_8B, GRANITE_13B, GRANITE_20B)}
+
+CONFIGS = {**ASSIGNED_ARCHS, **PAPER_ARCHS}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(CONFIGS)}")
+    return CONFIGS[name]
+
+
+def list_configs(assigned_only: bool = False):
+    return sorted(ASSIGNED_ARCHS if assigned_only else CONFIGS)
+
+
+__all__ = [
+    "ModelConfig", "ParallelConfig", "RunConfig", "ShapeConfig", "TrainConfig",
+    "SHAPES", "applicable", "get_shape", "get_config", "list_configs",
+    "ASSIGNED_ARCHS", "PAPER_ARCHS", "CONFIGS",
+]

@@ -1,0 +1,186 @@
+"""Autopilot analogue (§2.2.1): periodic node health checks exported as
+Prometheus-style gauges with PASS/ERR labels.
+
+Two check tiers, as in the paper:
+  * light checks run while workloads are present (device gemm throughput,
+    host<->device bandwidth, connectivity ping)
+  * intrusive checks (dcgm-level-3 analogue) run only on free nodes.
+
+On the simulated fleet, measured values are the real local microbenchmark
+scaled by the node's degradation factor, so the alert thresholds exercise the
+same code path a real deployment would.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.cluster import FailureKind, SimCluster
+from repro.core.telemetry import MetricsRegistry
+
+
+@dataclass
+class CheckResult:
+    name: str
+    node_id: int
+    value: float
+    passed: bool
+    unit: str = ""
+
+
+def _measure_gemm_gflops(n: int = 256, iters: int = 2) -> float:
+    """Local DGEMM microbenchmark (the paper's DCGM DGEMM diag analogue)."""
+    import jax
+    import jax.numpy as jnp
+    a = jnp.ones((n, n), jnp.float32)
+    f = jax.jit(lambda a: a @ a)
+    f(a).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        a = f(a)
+    a.block_until_ready()
+    dt = max(time.perf_counter() - t0, 1e-9)
+    return 2 * n ** 3 * iters / dt / 1e9
+
+
+def _measure_h2d_gbps(nbytes: int = 1 << 22) -> float:
+    """Host->device transfer (PCIe bandwidth check analogue)."""
+    import jax
+    host = np.ones(nbytes, np.uint8)
+    jax.device_put(host).block_until_ready()
+    t0 = time.perf_counter()
+    jax.device_put(host).block_until_ready()
+    return nbytes / max(time.perf_counter() - t0, 1e-9) / 1e9
+
+
+class HealthCheck:
+    name = "base"
+    level = "light"          # light | intrusive
+    unit = ""
+
+    def threshold(self, baseline: float) -> float:
+        return 0.5 * baseline
+
+    def measure(self) -> float:
+        raise NotImplementedError
+
+
+class GemmCheck(HealthCheck):
+    name = "gpu_dgemm_gflops"
+    unit = "GF/s"
+
+    def measure(self) -> float:
+        return _measure_gemm_gflops()
+
+
+class PcieBandwidthCheck(HealthCheck):
+    name = "pcie_h2d_gbps"
+    unit = "GB/s"
+
+    def threshold(self, baseline: float) -> float:
+        # paper: alert when 12h average drops below the link-generation floor
+        return 0.6 * baseline
+
+    def measure(self) -> float:
+        return _measure_h2d_gbps()
+
+
+class PingCheck(HealthCheck):
+    name = "net_ping_ok"
+    unit = "bool"
+
+    def threshold(self, baseline: float) -> float:
+        return 0.5
+
+    def measure(self) -> float:
+        return 1.0
+
+
+class Dcgm3Check(HealthCheck):
+    """Deep diagnostics: intrusive, only on free nodes (finds HBM corruption
+    that light checks miss — paper §2.3.2)."""
+    name = "dcgm_level3_ok"
+    level = "intrusive"
+    unit = "bool"
+
+    def threshold(self, baseline: float) -> float:
+        return 0.5
+
+    def measure(self) -> float:
+        return 1.0
+
+
+DEFAULT_CHECKS = (GemmCheck(), PcieBandwidthCheck(), PingCheck(),
+                  Dcgm3Check())
+
+# which failure kinds each check is sensitive to (simulation coupling)
+_SENSITIVITY: Dict[str, List[FailureKind]] = {
+    "gpu_dgemm_gflops": [FailureKind.POWER_BRAKE],
+    "pcie_h2d_gbps": [FailureKind.PCIE_DEGRADE],
+    "net_ping_ok": [FailureKind.PORT_FAILURE, FailureKind.HOST_CRASH],
+    "dcgm_level3_ok": [FailureKind.ROW_REMAP, FailureKind.CUDA_ERROR],
+}
+
+
+class Autopilot:
+    def __init__(self, cluster: SimCluster, registry: MetricsRegistry,
+                 checks=DEFAULT_CHECKS, measure_real: bool = False):
+        self.cluster = cluster
+        self.reg = registry
+        self.checks = checks
+        self.measure_real = measure_real
+        self._baselines: Dict[str, float] = {}
+
+    def _baseline(self, check: HealthCheck) -> float:
+        if check.name not in self._baselines:
+            if self.measure_real and check.name in ("gpu_dgemm_gflops",
+                                                    "pcie_h2d_gbps"):
+                self._baselines[check.name] = check.measure()
+            else:
+                self._baselines[check.name] = {
+                    "gpu_dgemm_gflops": 100.0, "pcie_h2d_gbps": 20.0,
+                    "net_ping_ok": 1.0, "dcgm_level3_ok": 1.0,
+                }[check.name]
+        return self._baselines[check.name]
+
+    def _simulated_value(self, check: HealthCheck, node) -> float:
+        base = self._baseline(check)
+        sens = _SENSITIVITY.get(check.name, [])
+        hit = [k for k in node.active_failures if k in sens]
+        if node.perf_factor == 0.0 and check.name == "net_ping_ok":
+            return 0.0
+        if not hit:
+            return base
+        if check.unit == "bool":
+            return 0.0
+        worst = min((0.375 if k == FailureKind.POWER_BRAKE else 0.3)
+                    for k in hit)
+        return base * worst
+
+    def run_checks(self, node_ids: Optional[List[int]] = None,
+                   busy: Optional[List[int]] = None) -> List[CheckResult]:
+        """Light checks everywhere; intrusive only on free nodes."""
+        busy = set(busy or [])
+        results = []
+        for node in self.cluster.nodes:
+            if node_ids is not None and node.id not in node_ids:
+                continue
+            for check in self.checks:
+                if check.level == "intrusive" and node.id in busy:
+                    continue
+                value = self._simulated_value(check, node)
+                passed = value >= check.threshold(self._baseline(check))
+                results.append(CheckResult(check.name, node.id, value, passed,
+                                           check.unit))
+                self.reg.gauge(f"autopilot_{check.name}").set(
+                    value, {"node": str(node.id)})
+                self.reg.gauge("autopilot_node_ok").set(
+                    float(passed), {"node": str(node.id),
+                                    "check": check.name})
+        return results
+
+    def err_nodes(self, results: List[CheckResult]) -> List[int]:
+        return sorted({r.node_id for r in results if not r.passed})

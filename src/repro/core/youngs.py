@@ -1,0 +1,30 @@
+"""Young's first-order optimal checkpoint interval [Young 1974], as used on
+Vela (§2.3.3): t_checkpoint = sqrt(2·δ·M) with δ = time to write a checkpoint
+and M = mean time between failures."""
+from __future__ import annotations
+
+import math
+
+
+def young_interval(delta: float, mtbf: float) -> float:
+    """Optimal seconds between checkpoints."""
+    assert delta > 0 and mtbf > 0
+    return math.sqrt(2.0 * delta * mtbf)
+
+
+def lost_fraction(delta: float, mtbf: float, interval: float) -> float:
+    """First-order expected fraction of wall time lost:
+    checkpoint overhead δ/τ + expected recompute τ/(2M)."""
+    assert interval > 0
+    return delta / interval + interval / (2.0 * mtbf)
+
+
+def optimal_lost_fraction(delta: float, mtbf: float) -> float:
+    """= sqrt(2δ/M), the overhead at the Young interval."""
+    return lost_fraction(delta, mtbf, young_interval(delta, mtbf))
+
+
+def checkpoint_every_n_steps(delta: float, mtbf: float,
+                             step_time: float) -> int:
+    """The interval quantized to training steps (>= 1)."""
+    return max(1, round(young_interval(delta, mtbf) / step_time))

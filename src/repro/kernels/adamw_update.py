@@ -1,0 +1,70 @@
+"""Fused AdamW update Pallas kernel: one HBM pass over (g, m, v, master)
+instead of the multi-pass elementwise chain (grad cast, moment updates, bias
+correction, weight decay, parameter write) — the optimizer is memory-bound,
+so pass count is the whole game.
+
+Grid over flat row blocks; multi-output pallas_call returns
+(new_m, new_v, new_master).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(g_ref, m_ref, v_ref, p_ref, nm_ref, nv_ref, np_ref, *,
+            lr: float, beta1: float, beta2: float, eps: float,
+            weight_decay: float, bias_corr1: float, bias_corr2: float,
+            scale: float):
+    g = g_ref[...].astype(jnp.float32) * scale
+    m = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    mhat = m / bias_corr1
+    vhat = v / bias_corr2
+    p = p_ref[...]
+    step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p
+    nm_ref[...] = m
+    nv_ref[...] = v
+    np_ref[...] = p - lr * step
+
+
+def adamw_fused(g, m, v, master, *, lr: float, beta1: float = 0.9,
+                beta2: float = 0.95, eps: float = 1e-8,
+                weight_decay: float = 0.0, step: int = 1,
+                grad_scale: float = 1.0, block: int = 4096,
+                interpret: bool = False):
+    """Flat f32 arrays (m, v, master) + grad (any float dtype).
+    Returns (new_m, new_v, new_master)."""
+    n = g.size
+    gf = g.reshape(n)
+    pad = (-n) % block
+    if pad:
+        gf = jnp.pad(gf, (0, pad))
+        m = jnp.pad(m.reshape(n), (0, pad))
+        v = jnp.pad(v.reshape(n), (0, pad))
+        master = jnp.pad(master.reshape(n), (0, pad))
+    else:
+        m, v, master = m.reshape(n), v.reshape(n), master.reshape(n)
+    nt = gf.size
+    kernel = functools.partial(
+        _kernel, lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+        weight_decay=weight_decay, bias_corr1=1.0 - beta1 ** step,
+        bias_corr2=1.0 - beta2 ** step, scale=grad_scale)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    f32 = jnp.float32
+    nm, nv, nmaster = pl.pallas_call(
+        kernel,
+        grid=(nt // block,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=(spec, spec, spec),
+        out_shape=(jax.ShapeDtypeStruct((nt,), f32),
+                   jax.ShapeDtypeStruct((nt,), f32),
+                   jax.ShapeDtypeStruct((nt,), f32)),
+        interpret=interpret,
+    )(gf, m, v, master)
+    shape = g.shape
+    return (nm[:n].reshape(shape), nv[:n].reshape(shape),
+            nmaster[:n].reshape(shape))

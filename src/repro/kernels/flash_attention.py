@@ -1,0 +1,91 @@
+"""Flash attention Pallas TPU kernel (GQA-aware, causal).
+
+Grid: (B·KV·G, n_q_blocks, n_kv_blocks) with the KV dimension innermost —
+TPU grids iterate the trailing dim sequentially, so the online-softmax
+running state (m, l, acc) lives in VMEM scratch across KV steps.  Block
+shapes are MXU-aligned (128 lanes); K/V blocks are shared across the G query
+groups of a KV head via the index map (b // G) so GQA never materializes
+repeated KV.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, bq: int, bk: int, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    # causal: skip KV blocks strictly above this q block's last row
+    live = (ki * bk <= qi * bq + bq - 1) if causal else (ki >= 0)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        v = v_ref[0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, block_q: int = 128,
+                         block_k: int = 128, interpret: bool = False):
+    """q: (BHG, S, D); k, v: (BKV, S, D) with BHG = BKV * G.  Returns (BHG, S, D)."""
+    bhg, sq, d = q.shape
+    bkv, skv, _ = k.shape
+    assert bhg % bkv == 0, (bhg, bkv)
+    g = bhg // bkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    n_q, n_kv = sq // bq, skv // bk
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               bq=bq, bk=bk, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=(bhg, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, qi, ki: (b // g, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, qi, ki: (b // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhg, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

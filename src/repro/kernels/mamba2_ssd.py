@@ -1,0 +1,76 @@
+"""Mamba2 SSD chunked-scan Pallas kernel.
+
+Grid: (B·H, n_chunks) with chunks innermost (sequential), carrying the
+(P, N) SSM state in VMEM scratch across chunks.  Within a chunk everything is
+MXU matmuls over (Q, ·) blocks: the attention-like intra-chunk term, the
+chunk-state contraction, and the state-output term.  B/C projections are
+shared across the H heads of a batch entry via the index map (b // H).
+
+Inputs are the *pre-scaled* SSD operands (X·dt, dt·A) exactly as in
+``repro.models.mamba2.ssd_chunked`` — the jnp reference oracle for this
+kernel is ``repro.kernels.ref.ssd_ref`` (naive sequential recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, da_ref, b_ref, c_ref, y_ref, state_scr, *, q: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros(state_scr.shape, jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    da = da_ref[0].astype(jnp.float32)        # (Q,)
+    b = b_ref[0].astype(jnp.float32)          # (Q, N)
+    c = c_ref[0].astype(jnp.float32)          # (Q, N)
+
+    cs = jnp.cumsum(da)                       # inclusive, <= 0 increments
+    # intra-chunk: decay(i,j) = exp(cs_i - cs_j) for j <= i
+    diff = cs[:, None] - cs[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+    att = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ()))) * L   # (Q, Q)
+    y = att @ x                                                      # (Q, P)
+    # inter-chunk: y_i += (C_i * exp(cs_i)) @ state^T
+    y = y + (c * jnp.exp(cs)[:, None]) @ state_scr[...].T            # (Q, P)
+    y_ref[0] = y.astype(y_ref.dtype)
+    # state update: S <- S * exp(cs_Q) + X^T (B * decay_to_end)
+    d2e = jnp.exp(cs[-1] - cs)
+    state_scr[...] = (state_scr[...] * jnp.exp(cs[-1])
+                      + x.T @ (b * d2e[:, None]))                    # (P, N)
+
+
+def ssd_scan_bhsd(x, da, b, c, *, chunk: int = 128,
+                  interpret: bool = False):
+    """x: (BH, S, P) pre-scaled by dt; da: (BH, S) = dt·A; b, c: (B, S, N)
+    (broadcast across heads via index map).  Returns y: (BH, S, P)."""
+    bh, s, p = x.shape
+    bb, _, n = b.shape
+    assert bh % bb == 0
+    h = bh // bb
+    qc = min(chunk, s)
+    assert s % qc == 0, (s, qc)
+    nc = s // qc
+    return pl.pallas_call(
+        functools.partial(_kernel, q=qc),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, qc, p), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, qc), lambda i, ci: (i, ci)),
+            pl.BlockSpec((1, qc, n), lambda i, ci: (i // h, ci, 0)),
+            pl.BlockSpec((1, qc, n), lambda i, ci: (i // h, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qc, p), lambda i, ci: (i, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, da, b, c)

@@ -1,0 +1,92 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run with interpret=True — the kernel body
+executes in python for correctness validation; on TPU they compile to Mosaic.
+Model code calls these through ``ForwardOpts(attn_impl="pallas")`` etc.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mamba2_ssd as _ssd
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import rwkv6_wkv as _wkv
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    """Model-layout wrapper.  q: (B, S, KV, G, D); k, v: (B, S, KV, D)."""
+    b, s, kv, g, d = q.shape
+    q2 = q.transpose(0, 2, 3, 1, 4).reshape(b * kv * g, s, d)
+    k2 = k.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    v2 = v.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    o = _fa.flash_attention_bhsd(q2, k2, v2, causal=causal,
+                                 block_q=min(block_q, s),
+                                 block_k=min(block_k, s),
+                                 interpret=_interpret())
+    return o.reshape(b, kv, g, s, d).transpose(0, 3, 1, 2, 4)
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int = 128):
+    """x: (..., d)."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    n = x2.shape[0]
+    br = block_rows
+    while n % br:
+        br //= 2
+    o = _rn.rmsnorm_rows(x2, scale, eps=eps, block_rows=max(br, 1),
+                         interpret=_interpret())
+    return o.reshape(shape)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def mamba2_ssd(x, da, b, c, *, chunk: int = 128):
+    """Model layout: x: (B, S, H, P) pre-scaled; da: (B, S, H);
+    b, c: (B, S, N)."""
+    bb, s, h, p = x.shape
+    x2 = x.transpose(0, 2, 1, 3).reshape(bb * h, s, p)
+    da2 = da.transpose(0, 2, 1).reshape(bb * h, s)
+    o = _ssd.ssd_scan_bhsd(x2, da2, b, c, chunk=chunk,
+                           interpret=_interpret())
+    return o.reshape(bb, h, s, p).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("lr", "beta1", "beta2", "eps",
+                                   "weight_decay", "step", "block"))
+def adamw_fused(g, m, v, master, *, lr, beta1=0.9, beta2=0.95, eps=1e-8,
+                weight_decay=0.0, step=1, block=4096):
+    from repro.kernels import adamw_update as _aw
+    return _aw.adamw_fused(g, m, v, master, lr=lr, beta1=beta1, beta2=beta2,
+                           eps=eps, weight_decay=weight_decay, step=step,
+                           block=block, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("vocab", "block_rows"))
+def softmax_xent(logits, labels, *, vocab: int = 0, block_rows: int = 8):
+    from repro.kernels import softmax_xent as _sx
+    return _sx.softmax_xent(logits, labels, vocab=vocab,
+                            block_rows=block_rows, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_wkv(r, k, v, lw, u, *, chunk: int = 32):
+    """Model layout: r, k, lw: (B, S, H, K); v: (B, S, H, V); u: (H, K)."""
+    b, s, h, kd = r.shape
+    vd = v.shape[-1]
+    def fold(t, last):
+        return t.transpose(0, 2, 1, 3).reshape(b * h, s, last)
+    o = _wkv.wkv6_scan_bhsd(fold(r, kd), fold(k, kd), fold(v, vd),
+                            fold(lw, kd), u, chunk=chunk,
+                            interpret=_interpret())
+    return o.reshape(b, h, s, vd).transpose(0, 2, 1, 3)

@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the allclose
+sweeps compare against).  The recurrent oracles are the *naive sequential*
+recurrences — so the tests validate both the kernels and the chunked-parallel
+formulations in repro.models against first principles."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (BHG, S, D); k, v: (BKV, S, D).  Dense softmax attention."""
+    bhg, sq, d = q.shape
+    bkv = k.shape[0]
+    g = bhg // bkv
+    kr = jnp.repeat(k, g, axis=0)
+    vr = jnp.repeat(v, g, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, k.shape[1]), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_ref(x, da, b, c):
+    """Naive SSD recurrence.  x: (BH, S, P) pre-scaled by dt; da: (BH, S);
+    b, c: (B, S, N) broadcast across heads.
+        h_t = exp(da_t) h_{t-1} + b_t ⊗ x_t;  y_t = c_t · h_t
+    """
+    bh, s, p = x.shape
+    bb, _, n = b.shape
+    h = bh // bb
+    br = jnp.repeat(b, h, axis=0).astype(jnp.float32)
+    cr = jnp.repeat(c, h, axis=0).astype(jnp.float32)
+    xf, daf = x.astype(jnp.float32), da.astype(jnp.float32)
+
+    def step(state, t):
+        xt, dat, bt, ct = t
+        state = state * jnp.exp(dat)[:, None, None] + \
+            xt[:, :, None] * bt[:, None, :]                    # (BH, P, N)
+        y = jnp.einsum("bn,bpn->bp", ct, state)
+        return state, y
+
+    init = jnp.zeros((bh, p, n), jnp.float32)
+    xs = (xf.swapaxes(0, 1), daf.swapaxes(0, 1), br.swapaxes(0, 1),
+          cr.swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, init, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)
+
+
+def adamw_ref(g, m, v, master, *, lr, beta1=0.9, beta2=0.95, eps=1e-8,
+              weight_decay=0.0, step=1):
+    gf = g.astype(jnp.float32)
+    m2 = beta1 * m + (1 - beta1) * gf
+    v2 = beta2 * v + (1 - beta2) * gf * gf
+    mhat = m2 / (1 - beta1 ** step)
+    vhat = v2 / (1 - beta2 ** step)
+    upd = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * master
+    return m2, v2, master - lr * upd
+
+
+def softmax_xent_ref(logits, labels, vocab: int = 0):
+    vp = logits.shape[-1]
+    vocab = vocab or vp
+    lf = logits.astype(jnp.float32)
+    if vocab != vp:
+        lf = lf + jnp.where(jnp.arange(vp) < vocab, 0.0, -1e30)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return lse - ll
+
+
+def wkv6_ref(r, k, v, lw, u):
+    """Naive WKV6 recurrence.  r, k, lw: (BH, S, K); v: (BH, S, V); u: (H, K).
+        o_t = r_t (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    bh, s, kd = r.shape
+    vd = v.shape[-1]
+    h = u.shape[0]
+    uf = jnp.tile(u.astype(jnp.float32), (bh // h, 1))          # (BH, K)
+    rf, kf, vf, lwf = (t.astype(jnp.float32) for t in (r, k, v, lw))
+
+    def step(state, t):
+        rt, kt, vt, lwt = t
+        a = kt[:, :, None] * vt[:, None, :]                     # (BH, K, V)
+        o = jnp.einsum("bk,bkv->bv", rt, state + uf[:, :, None] * a)
+        state = state * jnp.exp(lwt)[:, :, None] + a
+        return state, o
+
+    init = jnp.zeros((bh, kd, vd), jnp.float32)
+    xs = tuple(t.swapaxes(0, 1) for t in (rf, kf, vf, lwf))
+    _, ys = jax.lax.scan(step, init, xs)
+    return ys.swapaxes(0, 1).astype(r.dtype)

@@ -1,0 +1,74 @@
+"""RWKV6 WKV chunked-recurrence Pallas kernel.
+
+Grid: (B·H, n_chunks), chunks sequential, (K, V) state in VMEM scratch.
+Intra-chunk pairs use the rank-1 exponent split around the chunk midpoint
+(exact given the model's per-step log-decay floor; see models/rwkv6.py) so
+the pairwise decay matrix is two MXU matmuls instead of an O(Q²K) gather.
+The u-bonus diagonal is added separately.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, state_scr, *, q: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros(state_scr.shape, jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)          # (Q, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)          # (Q, V)
+    lw = lw_ref[0].astype(jnp.float32)        # (Q, K), <= 0
+    u = u_ref[0].astype(jnp.float32)          # (K,)
+
+    cs = jnp.cumsum(lw, axis=0)               # inclusive
+    ce = cs - lw                              # exclusive
+    mid = cs[-1] * 0.5
+    qf = r * jnp.exp(jnp.clip(ce - mid, -40.0, 40.0))
+    kf = k * jnp.exp(jnp.clip(mid - cs, -40.0, 40.0))
+    a = jax.lax.dot_general(qf, kf, (((1,), (1,)), ((), ())))   # (Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    a = jnp.where(ii > jj, a, 0.0)            # strictly lower
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)                 # (Q,)
+    y = a @ v + diag[:, None] * v
+    y = y + (r * jnp.exp(ce)) @ state_scr[...]                  # (Q, V)
+    y_ref[0] = y.astype(y_ref.dtype)
+    # state: S <- diag(exp(cs_Q)) S + (k * exp(cs_Q - cs))^T v
+    state_scr[...] = (state_scr[...] * jnp.exp(cs[-1])[:, None]
+                      + (k * jnp.exp(cs[-1] - cs)).T @ v)       # (K, V)
+
+
+def wkv6_scan_bhsd(r, k, v, lw, u, *, chunk: int = 32,
+                   interpret: bool = False):
+    """r, k, lw: (BH, S, K); v: (BH, S, V); u: (H, K) indexed by bh % H.
+    Returns y: (BH, S, V)."""
+    bh, s, kd = r.shape
+    vd = v.shape[-1]
+    h = u.shape[0]
+    qc = min(chunk, s)
+    assert s % qc == 0, (s, qc)
+    nc = s // qc
+    return pl.pallas_call(
+        functools.partial(_kernel, q=qc),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, qc, kd), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, qc, kd), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, qc, vd), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, qc, kd), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, kd), lambda i, ci: (i % h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qc, vd), lambda i, ci: (i, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, vd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((kd, vd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u)

@@ -1,0 +1,56 @@
+"""Fused softmax cross-entropy Pallas kernel: per row, one VMEM-resident pass
+computes max, logsumexp, and the label logit — the unfused XLA chain reads
+the (N, V) logits three times (max, exp-sum, gather).
+
+Returns per-row nll; the vocab-padded tail is masked inside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(logits_ref, labels_ref, out_ref, *, vocab: int, bn: int):
+    x = logits_ref[...].astype(jnp.float32)           # (bn, Vp)
+    vp = x.shape[-1]
+    if vp != vocab:                                    # mask padded vocab tail
+        col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+        x = jnp.where(col < vocab, x, NEG)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(x - m), axis=-1)) + m[:, 0]
+    labels = labels_ref[...]
+    cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    picked = jnp.sum(jnp.where(cols == labels[:, None], x, 0.0), axis=-1)
+    out_ref[...] = lse - picked
+
+
+def softmax_xent(logits, labels, *, vocab: int = 0, block_rows: int = 8,
+                 interpret: bool = False):
+    """logits: (..., Vp); labels: (...,) int32 < vocab.  Returns nll (...)."""
+    vp = logits.shape[-1]
+    vocab = vocab or vp
+    lead = logits.shape[:-1]
+    n = 1
+    for d in lead:
+        n *= d
+    x = logits.reshape(n, vp)
+    y = labels.reshape(n)
+    bn = block_rows
+    while n % bn:
+        bn //= 2
+    bn = max(bn, 1)
+    out = pl.pallas_call(
+        functools.partial(_kernel, vocab=vocab, bn=bn),
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, vp), lambda i: (i, 0)),
+                  pl.BlockSpec((bn,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(x, y)
+    return out.reshape(lead)

@@ -1,0 +1,3 @@
+"""Production mesh entry point (deliverable e).  Functions, not constants —
+importing never touches jax device state."""
+from repro.parallel.mesh import make_mesh, make_production_mesh  # noqa: F401

@@ -1,0 +1,145 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Pipeline-parallel multi-pod dry-run (the paper's PP dimension, §2.4):
+layers pipelined over the ``pod`` axis (point-to-point collective-permute
+hops between pods — the slow-fabric-friendly traffic pattern) with data
+parallelism inside each pod.
+
+The mesh here is (pod=2, data=256), fully shard_map-manual: the
+partial-manual composition (Manual pod + GSPMD-auto TP inside) trips an XLA
+CPU backend crash ("Invalid binary instruction opcode copy") — recorded as a
+backend limitation in DESIGN.md; on TPU the `auto=` composition is the
+intended deployment.
+
+    python -m repro.launch.pp_dryrun --arch granite-20b-code
+"""
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import LM, ForwardOpts
+from repro.models import transformer as tfm
+from repro.models.common import apply_norm
+from repro.parallel.mesh import make_mesh, make_production_mesh
+from repro.parallel.pipeline import pipeline_forward
+from repro.parallel.sharding import default_rules, logical_to_sharding, \
+    sharding_context
+from repro.roofline.hlo import parse_collectives
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def build_pp_forward(lm: LM, cfg, mesh, rules, opts, n_microbatches: int):
+    """Forward pass with layers pipelined over 'pod'; embed/unembed replicated
+    across pods; data/model axes stay GSPMD-automatic inside the stages."""
+    n_stages = mesh.shape["pod"]
+    assert cfg.num_layers % n_stages == 0
+
+    def layer_fn(lp, h):
+        h, _, _ = tfm._attn_layer(lp, cfg, h, opts, collect=False)
+        return h
+
+    def stage_fn(stage_params, x):
+        def one(h, lp):
+            return layer_fn(lp, h), None
+        body = jax.checkpoint(one, prevent_cse=False)
+        h, _ = jax.lax.scan(body, x, stage_params)
+        return h
+
+    pipe = pipeline_forward(stage_fn, n_stages, "pod")
+
+    def fwd(params, tokens):
+        h = tfm.embed_inputs(params, cfg, {"tokens": tokens})
+        b = h.shape[0]
+        mb = b // n_microbatches
+        x_mb = h.reshape(n_microbatches, mb, *h.shape[1:])
+
+        def inner(stage_params, x_loc):
+            out = pipe(stage_params, x_loc)
+            s = jax.lax.axis_index("pod")
+            out = jnp.where(s == n_stages - 1, out, jnp.zeros_like(out))
+            return jax.lax.psum(out, "pod")
+
+        spec_params = jax.tree.map(lambda _: P("pod"), params["layers"])
+        # fully manual: pipeline over pod, batch over data (microbatch dim
+        # replicated; the per-microbatch batch dim is data-sharded)
+        fn = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(spec_params, P(None, "data", None, None)),
+            out_specs=P(None, "data", None, None),
+            check_vma=False)
+        h = fn(params["layers"], x_mb)
+        h = h.reshape(b, *h.shape[2:])
+        logits = tfm.unembed(params, cfg, h)
+        return logits
+
+    return fwd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-20b-code")
+    ap.add_argument("--microbatches", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_config(args.arch), param_dtype="bfloat16")
+    lm = LM(cfg)
+    mesh = make_mesh((2, 256), ("pod", "data"))   # PP across pods, DP inside
+    rules = default_rules(mesh.axis_names)
+    rules["batch"] = ("data",)       # pod axis is the pipeline, not DP
+    opts = ForwardOpts(attn_impl="blockwise", q_chunk=1024, kv_chunk=1024,
+                       remat="none", scan_layers=True)
+
+    params_abs = lm.abstract_params()
+    params_sh = logical_to_sharding(lm.param_logical_axes(), params_abs,
+                                    mesh, rules)
+    # layer stack: leading dim over pods (stage-contiguous slices)
+    params_sh["layers"] = jax.tree.map(
+        lambda s: NamedSharding(mesh, P(*(("pod",) + tuple(s.spec)[1:]))),
+        params_sh["layers"])
+    b, s = 1024, 1024   # mb=256 divides data=256
+    tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    tok_sh = NamedSharding(mesh, P("data", None))
+
+    fwd = build_pp_forward(lm, cfg, mesh, rules, opts, args.microbatches)
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fwd, in_shardings=(params_sh, tok_sh)).lower(
+            params_abs, tokens)
+        compiled = lowered.compile()
+    dt = time.time() - t0
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    mem = compiled.memory_analysis()
+    rec = {
+        "arch": args.arch, "shape": f"pp_fwd_b{b}_s{s}",
+        "mesh": "pod2x16x16_PP", "tag": "pp", "chips": 512, "ok": True,
+        "compile_s": round(dt, 1),
+        "collectives": coll,
+        "cost_analysis": {k: float(v) for k, v in
+                          (compiled.cost_analysis() or {}).items()
+                          if isinstance(v, (int, float))},
+        "memory_analysis": {k: int(getattr(mem, k)) for k in
+                            ("argument_size_in_bytes", "temp_size_in_bytes")
+                            if hasattr(mem, k)},
+    }
+    out = OUT_DIR / "pod2x16x16" / f"{args.arch}__pp_fwd.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=1, default=str))
+    cp = coll["per_kind"].get("collective-permute", {"bytes": 0, "count": 0})
+    print(f"[OK] PP dry-run {args.arch}: compile={dt:.1f}s "
+          f"collective-permute hops={cp['count']} "
+          f"({cp['bytes']/1e9:.2f} GB/dev) "
+          f"total coll={coll['total_bytes']/1e9:.2f} GB/dev")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Batched serving driver (watsonx.ai-style inference cluster role).
+
+    python -m repro.launch.serve --arch qwen3-4b --reduced --requests 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import CONFIGS, get_config
+from repro.models import LM
+from repro.serve import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=sorted(CONFIGS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    import dataclasses
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(cfg.reduced(), dtype="float32")
+    lm = LM(cfg)
+    params = lm.init(jax.random.key(0))
+    eng = ServeEngine(lm, params, args.max_batch, args.max_seq)
+
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              rng.integers(4, 12)).astype(np.int32)
+        eng.submit(Request(i, prompt, max_new_tokens=args.new_tokens))
+    done = eng.run_until_drained()
+    wall = time.perf_counter() - t0
+    total_tokens = sum(len(r.out_tokens) for r in done)
+    print(f"served {len(done)} requests, {total_tokens} tokens in "
+          f"{wall:.1f}s ({total_tokens/wall:.1f} tok/s)")
+    print(f"TTFT p50 {eng.reg.histogram('serve_ttft_seconds').quantile(0.5)*1e3:.0f}ms "
+          f"p95 {eng.reg.histogram('serve_ttft_seconds').quantile(0.95)*1e3:.0f}ms")
+    print(f"latency p50 "
+          f"{eng.reg.histogram('serve_latency_seconds').quantile(0.5):.2f}s")
+
+
+if __name__ == "__main__":
+    main()

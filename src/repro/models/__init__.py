@@ -1,0 +1,5 @@
+from repro.models.lm import LM, input_logical_axes, input_specs, make_batch
+from repro.models.transformer import ForwardOpts
+
+__all__ = ["LM", "ForwardOpts", "input_specs", "input_logical_axes",
+           "make_batch"]

@@ -1,0 +1,289 @@
+"""GQA attention: train/prefill (dense or blockwise-flash) + decode with KV cache.
+
+Three implementations share one set of weights:
+
+* ``dense``      — materializes (Sq, Skv) scores; only for tiny smoke tests.
+* ``blockwise``  — FlashAttention expressed in pure XLA: python-unrolled loop over
+  query chunks, ``lax.scan`` over the causally-required KV chunks with an online
+  softmax.  Causal-FLOP-optimal (no wasted upper-triangle work), O(chunk) memory,
+  GSPMD-partitionable — this is the dry-run / production XLA path.
+* ``pallas``     — the TPU kernel in ``repro.kernels.flash_attention`` (interpret
+  mode on CPU); selected via ``impl="pallas"``.
+
+Decode is a single-token attention over a (B, Smax, KV, D) cache.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P, apply_rope, dense_spec, norm_spec, rms_norm
+from repro.parallel.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def attention_spec(cfg, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    depth_scale = 0.02 / math.sqrt(2 * max(cfg.num_layers, 1))
+    spec = {
+        "wq": dense_spec(d, 0, ("embed", "heads", "head_dim"), cfg.use_bias,
+                         shape=(d, h, hd)),
+        "wk": dense_spec(d, 0, ("embed", "kv_heads", "head_dim"), cfg.use_bias,
+                         shape=(d, kv, hd)),
+        "wv": dense_spec(d, 0, ("embed", "kv_heads", "head_dim"), cfg.use_bias,
+                         shape=(d, kv, hd)),
+        "wo": {"kernel": P((h, hd, d), ("heads", "head_dim", "embed"),
+                           scale=depth_scale)},
+    }
+    if cfg.use_bias:
+        spec["wo"]["bias"] = P((d,), ("embed",), init="zeros")
+    if cfg.qk_norm and not cross:
+        spec["q_norm"] = {"scale": P((hd,), ("head_dim",), init="ones", )}
+        spec["k_norm"] = {"scale": P((hd,), ("head_dim",), init="ones")}
+    return spec
+
+
+def _proj(p, x, dtype, tp_shardmap: bool = False):
+    k = p["kernel"]
+    bias = p["bias"].reshape(k.shape[1:]) if "bias" in p else None
+    if tp_shardmap:
+        from repro.parallel.tpmm import col_proj_tp
+        return col_proj_tp(x, k, bias)
+    y = jnp.einsum("bsd,dhe->bshe", x, k.astype(dtype))
+    if bias is not None:
+        y = y + bias.astype(dtype)
+    return y
+
+
+def project_qkv(p, cfg, xq, xkv, q_positions, kv_positions, rope: bool = True,
+                flat_heads: bool = False, tp_shardmap: bool = False):
+    """Returns q: (B,Sq,KV,G,D) grouped for GQA; k, v: (B,Skv,KV,D).
+
+    flat_heads (train/prefill): KV is repeated to H so q/k/v are all
+    (B,S,H,D) reshaped to KV=H, G=1 — the flat head axis then shards over the
+    ``model`` mesh axis whenever H divides it (e.g. llama3-405b H=128,
+    qwen3 H=32), instead of falling back to fully-replicated attention when
+    the *grouped* dims (KV, G) don't divide.  Per-chip repeated-KV bytes
+    equal the per-chip q bytes, so nothing blows up.  Decode keeps the
+    grouped layout (a repeated KV *cache* would be a real memory hit).
+    """
+    dtype = xq.dtype
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = _proj(p["wq"], xq, dtype, tp_shardmap)         # (B,Sq,H,D)
+    k = _proj(p["wk"], xkv, dtype, tp_shardmap)        # (B,Skv,KV,D)
+    v = _proj(p["wv"], xkv, dtype, tp_shardmap)
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_norm(q, p["q_norm"]["scale"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"]["scale"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, q_positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    if flat_heads and h != kv:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+        kv = h
+    q = q.reshape(q.shape[0], q.shape[1], kv, h // kv, hd)
+    if flat_heads:
+        q = constrain(q, ("batch", "seq", "heads", None, None))
+        k = constrain(k, ("batch", "seq", "heads", None))
+        v = constrain(v, ("batch", "seq", "heads", None))
+    else:
+        q = constrain(q, ("batch", "seq", "kv_heads", "q_group", None))
+        k = constrain(k, ("batch", "seq", "kv_heads", None))
+        v = constrain(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def output_proj(p, cfg, y, tp_shardmap: bool = False):
+    """y: (B,S,KV,G,D) -> (B,S,d)."""
+    dtype = y.dtype
+    b, s = y.shape[:2]
+    y = y.reshape(b, s, cfg.num_heads, cfg.resolved_head_dim)
+    if tp_shardmap:
+        from repro.parallel.tpmm import o_proj_tp
+        return o_proj_tp(y, p["wo"]["kernel"], p["wo"].get("bias"))
+    out = jnp.einsum("bshe,hed->bsd", y, p["wo"]["kernel"].astype(dtype))
+    if "bias" in p["wo"]:
+        out = out + p["wo"]["bias"].astype(dtype)
+    return out
+
+
+# ------------------------------------------------------------- dense variant --
+
+def dense_attention(q, k, v, causal: bool, q_offset: int = 0):
+    """q: (B,Sq,KV,G,D); k,v: (B,Skv,KV,D)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if causal:
+        sq, skv = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(skv)[None, :]
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+
+
+# --------------------------------------------------------- blockwise variant --
+
+def _online_block(carry, kv_blk, q_blk, bias=None):
+    """One online-softmax step.  q_blk: (B,Qc,KV,G,D) pre-scaled;
+    kv_blk: (k, v).  bias: optional (Qc, kvc) additive mask — only the
+    diagonal block pays for masking."""
+    m_prev, l_prev, acc = carry
+    k_blk, v_blk = kv_blk
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k_blk).astype(jnp.float32)
+    if bias is not None:
+        s = s + bias
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_blk.dtype), v_blk)
+    acc = acc * corr[..., None] + pv.astype(jnp.float32)
+    return (m_new, l_new, acc), None
+
+
+def blockwise_attention(q, k, v, causal: bool, q_chunk: int = 1024,
+                        kv_chunk: int = 1024, q_offset: int = 0):
+    """Flash attention in pure XLA.  Causal-FLOP-optimal: query chunk i only
+    visits KV chunks 0..ceil((q_offset+(i+1)*qc)/kvc)-1 (static per unrolled
+    iteration).  Memory-lean: the softmax scale is folded into q before the
+    matmul (d-sized instead of S²), and masking is an additive bias that is
+    exactly zero on fully-visible blocks (fuses away) rather than a `where`
+    pass over every score block."""
+    b, sq, kvh, g, hd = q.shape
+    skv = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0, (sq, q_chunk, skv, kv_chunk)
+    q = q * (1.0 / math.sqrt(hd))            # folded scale (d-sized, not S²)
+    n_q = sq // q_chunk
+    outs = []
+    for i in range(n_q):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=1)
+        q_end = q_offset + (i + 1) * q_chunk if causal else skv
+        n_kv = -(-min(q_end, skv) // kv_chunk)        # ceil
+        kv_len = n_kv * kv_chunk
+        k_i = jax.lax.dynamic_slice_in_dim(k, 0, kv_len, axis=1)
+        v_i = jax.lax.dynamic_slice_in_dim(v, 0, kv_len, axis=1)
+        # (n_kv, B, kvc, KV, D) scan layout.  NOTE (§Perf llama405 it0,
+        # refuted): splitting masked diagonal blocks out of the scan to skip
+        # the mask op on visible blocks INCREASED bytes-accessed by 12% —
+        # the uniform scan fuses better; keep the single-scan structure.
+        k_i = k_i.reshape(b, n_kv, kv_chunk, kvh, hd).swapaxes(0, 1)
+        v_i = v_i.reshape(b, n_kv, kv_chunk, kvh, hd).swapaxes(0, 1)
+        if causal:
+            qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+            kpos = (jnp.arange(n_kv)[:, None] * kv_chunk
+                    + jnp.arange(kv_chunk)[None, :])      # (n_kv, kvc)
+            bias = jnp.where(qpos[None, :, None] >= kpos[:, None, :],
+                             0.0, NEG_INF).astype(jnp.float32)
+            bias = bias[:, None, None, None, :, :]
+        else:
+            bias = jnp.zeros((n_kv, 1, 1, 1, 1, 1), jnp.float32)
+        init = (jnp.full((b, kvh, g, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((b, kvh, g, q_chunk), jnp.float32),
+                jnp.zeros((b, kvh, g, q_chunk, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            partial(_online_block_bias, q_blk=q_blk),
+            init, (k_i, v_i, bias))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(o.transpose(0, 3, 1, 2, 4).astype(q.dtype))  # (B,Qc,KV,G,D)
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def _online_block_bias(carry, kv_blk, q_blk):
+    k_blk, v_blk, bias = kv_blk
+    return _online_block(carry, (k_blk, v_blk), q_blk, bias=bias)
+
+
+# ----------------------------------------------------------------- decode ----
+
+def decode_attention(q, k_cache, v_cache, cache_index):
+    """q: (B,1,KV,G,D); caches: (B,Smax,KV,D); attends to positions <= index."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k_cache).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    valid = jnp.arange(k_cache.shape[1]) <= cache_index       # (Smax,)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache)
+
+
+# ------------------------------------------------------------- full layers ----
+
+def attention_block(p, cfg, x, *, impl: str = "blockwise", causal: bool = True,
+                    q_chunk: int = 1024, kv_chunk: int = 1024,
+                    flat_heads: bool = False, tp_shardmap: bool = False):
+    """Self-attention over a full sequence (train / prefill).  Returns (y, (k, v))."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = project_qkv(p, cfg, x, x, positions, positions,
+                          flat_heads=flat_heads, tp_shardmap=tp_shardmap)
+    if impl == "dense":
+        y = dense_attention(q, k, v, causal)
+    elif impl == "blockwise":
+        y = blockwise_attention(q, k, v, causal, q_chunk, kv_chunk)
+    elif impl == "seqsp":
+        # sequence-sharded shard_map path (archs with heads ∤ model axis)
+        from repro.parallel.seqattn import seq_sharded_attention
+        assert causal, "seqsp path is causal-only"
+        y = seq_sharded_attention(q, k, v, q_chunk=q_chunk,
+                                  kv_chunk=kv_chunk)
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+        y = kops.flash_attention(q, k, v, causal=causal)
+    else:
+        raise ValueError(impl)
+    return output_proj(p, cfg, y, tp_shardmap=tp_shardmap), (k, v)
+
+
+def cross_attention_block(p, cfg, x, enc_kv):
+    """Cross-attention: queries from x, keys/values precomputed (k, v) tuples."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    dtype = x.dtype
+    q = _proj(p["wq"], x, dtype)
+    q = q.reshape(b, s, cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads,
+                  cfg.resolved_head_dim)
+    k, v = enc_kv
+    y = blockwise_attention(q, k, v, causal=False)
+    return output_proj(p, cfg, y)
+
+
+def encode_kv(p, cfg, enc_out):
+    """Precompute cross-attention K/V from encoder output (no RoPE)."""
+    dtype = enc_out.dtype
+    k = _proj(p["wk"], enc_out, dtype)
+    v = _proj(p["wv"], enc_out, dtype)
+    return k, v
+
+
+def attention_decode_block(p, cfg, x, k_cache, v_cache, cache_index,
+                           rope: bool = True):
+    """One-token decode.  x: (B,1,d); caches (B,Smax,KV,D).  Returns
+    (y, new_k_cache, new_v_cache)."""
+    b = x.shape[0]
+    pos = jnp.full((b, 1), cache_index, jnp.int32)
+    q, k, v = project_qkv(p, cfg, x, x, pos, pos, rope=rope)
+    # Pin the cache sharding (batch over DP, sequence over the model axis —
+    # flash-decoding style).  Without this GSPMD may back-propagate the
+    # attention head sharding onto the cache and materialize a full-cache
+    # reshard (observed: 2×38 GB all-gathers per step on qwen3 decode_32k).
+    cache_axes = ("batch", "kv_seq", "kv_heads", None)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), cache_index, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), cache_index, axis=1)
+    k_cache = constrain(k_cache, cache_axes)
+    v_cache = constrain(v_cache, cache_axes)
+    y = decode_attention(q, k_cache, v_cache, cache_index)
+    y = constrain(y, ("batch", None, None, None, None))
+    return output_proj(p, cfg, y), k_cache, v_cache

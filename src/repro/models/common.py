@@ -1,0 +1,216 @@
+"""Functional module system: param specs, initializers, logical axes, shared ops.
+
+Every model builds a *spec tree* (nested dicts of ``P`` leaves).  ``init_params``
+materializes arrays; ``logical_axes`` extracts the parallel tree of logical axis
+name tuples consumed by ``repro.parallel.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ----------------------------------------------------------------- param spec --
+
+
+@dataclass(frozen=True)
+class P:
+    """A parameter spec leaf: shape + logical axes + initializer."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones | uniform_conv | constant
+    scale: float = 0.02
+    dtype: str = "float32"
+    pin_dtype: bool = False   # keep f32 under set_dtypes (norms, A_log, dt_bias…)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def set_dtypes(spec, dtype: str):
+    """Cast every non-pinned leaf spec to ``dtype`` (e.g. bf16 compute weights)."""
+    return spec_tree_map(
+        lambda p: p if p.pin_dtype else dataclasses.replace(p, dtype=dtype), spec)
+
+
+def is_spec_leaf(x) -> bool:
+    return isinstance(x, P)
+
+
+def spec_tree_map(fn, spec):
+    return jax.tree.map(fn, spec, is_leaf=is_spec_leaf)
+
+
+def _init_leaf(key, p: P):
+    dtype = jnp.dtype(p.dtype)
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "normal":
+        return (p.scale * jax.random.normal(key, p.shape)).astype(dtype)
+    if p.init == "uniform_conv":  # depthwise conv kernels
+        fan = max(int(np.prod(p.shape[:-1])), 1)
+        bound = 1.0 / np.sqrt(fan)
+        return jax.random.uniform(key, p.shape, dtype, -bound, bound)
+    if p.init == "a_log":        # mamba2: A ~ U[1, 16], store log A
+        a = jax.random.uniform(key, p.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(a).astype(dtype)
+    if p.init == "dt_bias":      # mamba2: dt ~ exp(U[log 1e-3, log 0.1]); inv-softplus
+        dt = jnp.exp(jax.random.uniform(key, p.shape, jnp.float32,
+                                        np.log(1e-3), np.log(0.1)))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    if p.init == "rwkv_decay":   # rwkv6: per-channel decay speed ramp
+        n = p.shape[-1]
+        ramp = (np.arange(n) / max(n - 1, 1)) ** 0.9
+        return jnp.broadcast_to(jnp.asarray(-6.0 + 5.0 * ramp, jnp.float32),
+                                p.shape).astype(dtype)
+    raise ValueError(p.init)
+
+
+def init_params(key, spec):
+    """Materialize a spec tree into an array pytree (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree.flatten(spec, is_leaf=is_spec_leaf)
+    keys = jax.random.split(key, len(leaves))
+    arrays = [_init_leaf(k, p) for k, p in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def abstract_params(spec):
+    """ShapeDtypeStruct tree matching ``init_params`` (no allocation; dry-run)."""
+    return spec_tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype)), spec)
+
+
+def logical_axes(spec):
+    return spec_tree_map(lambda p: p.axes, spec)
+
+
+def stack_spec(spec, n: int, axis_name: Optional[str] = None):
+    """Add a leading stacked-layers dim to every leaf (for scan-over-layers)."""
+    return spec_tree_map(
+        lambda p: dataclasses.replace(p, shape=(n,) + p.shape,
+                                      axes=(axis_name,) + p.axes), spec)
+
+
+def param_count_tree(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+# ------------------------------------------------------------------- numerics --
+
+def cast(x, dtype):
+    return x.astype(dtype) if x.dtype != jnp.dtype(dtype) else x
+
+
+def rms_norm(x, scale, eps: float, dtype=None):
+    dtype = dtype or x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float, dtype=None):
+    dtype = dtype or x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def norm_spec(cfg, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": P((d,), ("norm",), init="ones")}
+    return {"scale": P((d,), ("norm",), init="ones"),
+            "bias": P((d,), ("norm",), init="zeros")}
+
+
+def apply_norm(p, x, cfg, dtype=None):
+    if "bias" in p:
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps, dtype)
+    return rms_norm(x, p["scale"], cfg.norm_eps, dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------- RoPE --
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]                               # head dim
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- losses --
+
+def cross_entropy(logits, labels, vocab_size: int, z_loss: float = 0.0,
+                  mask=None):
+    """CE over a (possibly vocab-padded) logits tensor; labels < vocab_size.
+
+    Returns (loss, aux) with aux containing z-loss and accuracy terms.
+    """
+    padded = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    if padded != vocab_size:
+        # Mask the padded vocab tail with a broadcast add (cheap, fusable).
+        pad_mask = jnp.where(jnp.arange(padded) < vocab_size, 0.0, -1e9)
+        lf = lf + pad_mask
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    zl = z_loss * jnp.square(lse)
+    per_tok = nll + zl
+    if mask is not None:
+        per_tok = per_tok * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+    else:
+        denom = float(np.prod(labels.shape))
+    loss = per_tok.sum() / denom
+    aux = {"nll": nll.sum() / denom, "z_loss": zl.sum() / denom}
+    return loss, aux
+
+
+# ------------------------------------------------------------------ helpers --
+
+def dense_spec(d_in: int, d_out: int, axes, use_bias: bool, scale: float = 0.02,
+               shape=None, init: str = "normal"):
+    shape = shape or (d_in, d_out)
+    spec = {"kernel": P(shape, axes, init=init, scale=scale)}
+    if use_bias:
+        # bias covers every output dim (all but the contracted first dim)
+        spec["bias"] = P(shape[1:], axes[1:], init="zeros")
+    return spec
+
+
+def dense(p, x, contracting: str = "d", dtype=None):
+    """x @ kernel with arbitrary kernel rank; contraction over first kernel dim."""
+    dtype = dtype or x.dtype
+    k = cast(p["kernel"], dtype)
+    ndim_out = k.ndim - 1
+    out_str = "".join(chr(ord("m") + i) for i in range(ndim_out))
+    y = jnp.einsum(f"...d,d{out_str}->...{out_str}", x, k)
+    if "bias" in p:
+        y = y + cast(p["bias"], dtype)
+    return y

@@ -1,0 +1,147 @@
+"""Encoder-decoder stack (seamless-m4t backbone).  The audio frontend is a
+stub: the encoder consumes precomputed frame embeddings (B, E, d) supplied by
+``input_specs()`` (paper shape-table convention for [audio] archs)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.common import P, apply_norm, norm_spec, set_dtypes, stack_spec
+from repro.models.transformer import ForwardOpts, _remat
+from repro.parallel.sharding import constrain
+
+
+def enc_layer_spec(cfg):
+    return {"ln1": norm_spec(cfg), "attn": attn.attention_spec(cfg),
+            "ln2": norm_spec(cfg), "mlp": mlp_mod.mlp_spec(cfg)}
+
+
+def dec_layer_spec(cfg):
+    return {"ln1": norm_spec(cfg), "self_attn": attn.attention_spec(cfg),
+            "ln2": norm_spec(cfg), "cross_attn": attn.attention_spec(cfg, cross=True),
+            "ln3": norm_spec(cfg), "mlp": mlp_mod.mlp_spec(cfg)}
+
+
+def build_spec(cfg):
+    d, v = cfg.d_model, cfg.padded_vocab
+    spec: Dict[str, Any] = {
+        "embed": {"table": P((v, d), ("vocab", "embed"))},
+        "enc_layers": stack_spec(enc_layer_spec(cfg), cfg.encoder_layers,
+                                 "layers"),
+        "enc_norm": norm_spec(cfg),
+        "dec_layers": stack_spec(dec_layer_spec(cfg), cfg.num_layers, "layers"),
+        "final_norm": norm_spec(cfg),
+        "lm_head": {"kernel": P((d, v), ("embed", "vocab"))},
+    }
+    return set_dtypes(spec, cfg.param_dtype)
+
+
+def encode(params, cfg, enc_embeds, opts: ForwardOpts = ForwardOpts()):
+    """enc_embeds: (B, E, d) stub frontend output -> encoder hidden states."""
+    h = enc_embeds.astype(jnp.dtype(cfg.dtype))
+    h = constrain(h, ("batch", "enc_seq", "embed"))
+
+    def body(h, lp):
+        a, _ = attn.attention_block(lp["attn"], cfg,
+                                    apply_norm(lp["ln1"], h, cfg),
+                                    impl=opts.attn_impl, causal=False,
+                                    q_chunk=opts.q_chunk,
+                                    kv_chunk=opts.kv_chunk)
+        h = h + a
+        h = h + mlp_mod.mlp(lp["mlp"], cfg, apply_norm(lp["ln2"], h, cfg))
+        return constrain(h, ("batch", "enc_seq", "embed")), None
+
+    body = _remat(body, opts.remat)
+    from repro.models.transformer import _scan_or_unroll
+    h, _ = _scan_or_unroll(body, h, params["enc_layers"],
+                           cfg.encoder_layers, opts.scan_layers)
+    return apply_norm(params["enc_norm"], h, cfg)
+
+
+def decoder_forward(params, cfg, tokens, enc_out,
+                    opts: ForwardOpts = ForwardOpts(),
+                    collect_cache: bool = False):
+    dtype = jnp.dtype(cfg.dtype)
+    h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dtype)
+    h = constrain(h, ("batch", "seq", "embed"))
+
+    def body(h, lp):
+        a, kv = attn.attention_block(lp["self_attn"], cfg,
+                                     apply_norm(lp["ln1"], h, cfg),
+                                     impl=opts.attn_impl,
+                                     q_chunk=opts.q_chunk,
+                                     kv_chunk=opts.kv_chunk)
+        h = h + a
+        xkv = attn.encode_kv(lp["cross_attn"], cfg, enc_out)
+        c = attn.cross_attention_block(lp["cross_attn"], cfg,
+                                       apply_norm(lp["ln2"], h, cfg), xkv)
+        h = h + c
+        h = h + mlp_mod.mlp(lp["mlp"], cfg, apply_norm(lp["ln3"], h, cfg))
+        h = constrain(h, ("batch", "seq", "embed"))
+        cache = ({"k": kv[0], "v": kv[1], "xk": xkv[0], "xv": xkv[1]}
+                 if collect_cache else None)
+        return h, cache
+
+    body = _remat(body, opts.remat)
+    from repro.models.transformer import _scan_or_unroll
+    h, caches = _scan_or_unroll(body, h, params["dec_layers"],
+                                cfg.num_layers, opts.scan_layers)
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"]["kernel"].astype(dtype))
+    return constrain(logits, ("batch", "seq", "vocab")), caches
+
+
+def forward(params, cfg, batch, opts: ForwardOpts = ForwardOpts(),
+            collect_cache: bool = False):
+    enc_out = encode(params, cfg, batch["enc_embeds"], opts)
+    logits, caches = decoder_forward(params, cfg, batch["tokens"], enc_out,
+                                     opts, collect_cache)
+    cache = {"layers": caches} if collect_cache else None
+    return logits, {"moe_aux": jnp.zeros((), jnp.float32)}, cache
+
+
+def init_cache(cfg, batch_size: int, max_seq: int, enc_len: int,
+               dtype=jnp.bfloat16, abstract: bool = False):
+    L, b = cfg.num_layers, batch_size
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def mk(shape):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    return {"layers": {
+        "k": mk((L, b, max_seq, kvh, hd)), "v": mk((L, b, max_seq, kvh, hd)),
+        "xk": mk((L, b, enc_len, kvh, hd)), "xv": mk((L, b, enc_len, kvh, hd)),
+    }}
+
+
+def decode_step(params, cfg, tokens, cache, cache_index,
+                scan_layers: bool = True):
+    dtype = jnp.dtype(cfg.dtype)
+    h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dtype)
+
+    def body(h, xs):
+        lp, lc = xs
+        a_in = apply_norm(lp["ln1"], h, cfg)
+        a, nk, nv = attn.attention_decode_block(lp["self_attn"], cfg, a_in,
+                                                lc["k"], lc["v"], cache_index)
+        h = h + a
+        c = attn.cross_attention_block(lp["cross_attn"], cfg,
+                                       apply_norm(lp["ln2"], h, cfg),
+                                       (lc["xk"], lc["xv"]))
+        h = h + c
+        h = h + mlp_mod.mlp(lp["mlp"], cfg, apply_norm(lp["ln3"], h, cfg))
+        return h, {"k": nk, "v": nv, "xk": lc["xk"], "xv": lc["xv"]}
+
+    from repro.models.transformer import _scan_or_unroll
+    h, new_layers = _scan_or_unroll(body, h, (params["dec_layers"],
+                                              cache["layers"]),
+                                    cfg.num_layers, scan_layers)
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"]["kernel"].astype(dtype))
+    return logits, {"layers": new_layers}

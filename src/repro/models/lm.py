@@ -1,0 +1,166 @@
+"""Top-level model facade: one API over all families, plus ``input_specs()``
+(ShapeDtypeStruct stand-ins for every model input — the dry-run contract)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+from repro.models.common import (abstract_params, cross_entropy, init_params,
+                                 logical_axes)
+from repro.models.transformer import ForwardOpts
+
+
+@dataclass
+class LM:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params ----
+    @property
+    def is_encdec(self) -> bool:
+        return self.cfg.family == "encdec"
+
+    def spec(self):
+        return (encdec.build_spec(self.cfg) if self.is_encdec
+                else transformer.build_spec(self.cfg))
+
+    def init(self, rng):
+        return init_params(rng, self.spec())
+
+    def abstract_params(self):
+        return abstract_params(self.spec())
+
+    def param_logical_axes(self):
+        return logical_axes(self.spec())
+
+    # ------------------------------------------------------------ forward ----
+    def forward(self, params, batch, opts: ForwardOpts = ForwardOpts(),
+                collect_cache: bool = False):
+        if self.is_encdec:
+            return encdec.forward(params, self.cfg, batch, opts, collect_cache)
+        return transformer.forward(params, self.cfg, batch, opts, collect_cache)
+
+    def loss(self, params, batch, opts: ForwardOpts = ForwardOpts(),
+             moe_aux_weight: float = 1e-2, z_loss: float = 1e-4):
+        logits, aux, _ = self.forward(params, batch, opts)
+        cfg = self.cfg
+        if cfg.family == "vlm" and cfg.num_image_tokens:
+            logits = logits[:, cfg.num_image_tokens:, :]
+        loss, ce_aux = cross_entropy(logits, batch["labels"], cfg.vocab_size,
+                                     z_loss=z_loss)
+        loss = loss + moe_aux_weight * aux["moe_aux"]
+        metrics = {"loss": loss, "nll": ce_aux["nll"],
+                   "z_loss": ce_aux["z_loss"], "moe_aux": aux["moe_aux"]}
+        return loss, metrics
+
+    # -------------------------------------------------------------- serve ----
+    def prefill(self, params, batch, opts: ForwardOpts = ForwardOpts()):
+        """Returns (last_logits, cache)."""
+        logits, _, cache = self.forward(params, batch, opts, collect_cache=True)
+        return logits[:, -1:, :], cache
+
+    def decode_step(self, params, tokens, cache, cache_index,
+                    scan_layers: bool = True):
+        if self.is_encdec:
+            return encdec.decode_step(params, self.cfg, tokens, cache,
+                                      cache_index, scan_layers=scan_layers)
+        return transformer.decode_step(params, self.cfg, tokens, cache,
+                                       cache_index, scan_layers=scan_layers)
+
+    def init_cache(self, batch_size: int, max_seq: int, enc_len: int = 0,
+                   dtype=jnp.bfloat16, abstract: bool = False):
+        if self.is_encdec:
+            return encdec.init_cache(self.cfg, batch_size, max_seq,
+                                     enc_len or max_seq // self.cfg.enc_ratio,
+                                     dtype, abstract)
+        return transformer.init_cache(self.cfg, batch_size, max_seq, dtype,
+                                      abstract)
+
+
+# ------------------------------------------------------------- input specs ----
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.family == "vlm" and cfg.num_image_tokens:
+        return seq_len - cfg.num_image_tokens
+    return seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the batch of a given shape cell.
+
+    - train/prefill: tokens (+labels for train) and any stub-frontend
+      embeddings (precomputed frames / patches — [audio]/[vlm] convention).
+    - decode: one new token per sequence + the KV/recurrent-state cache at
+      seq_len (built by ``LM.init_cache(abstract=True)``).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        st = text_len(cfg, s)
+        batch: Dict[str, Any] = {"tokens": sds((b, st), i32)}
+        if shape.kind == "train":
+            batch["labels"] = sds((b, st), i32)
+        if cfg.family == "vlm" and cfg.num_image_tokens:
+            batch["img_embeds"] = sds((b, cfg.num_image_tokens, cfg.d_model),
+                                      dtype)
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = sds((b, s // cfg.enc_ratio, cfg.d_model),
+                                      dtype)
+        return batch
+    if shape.kind == "decode":
+        lm = LM(cfg)
+        return {
+            "tokens": sds((b, 1), i32),
+            "cache": lm.init_cache(b, s, dtype=dtype, abstract=True),
+            "cache_index": sds((), i32),
+        }
+    raise ValueError(shape.kind)
+
+
+def input_logical_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Logical axes tree matching ``input_specs`` (for dry-run in_shardings)."""
+    if shape.kind in ("train", "prefill"):
+        axes: Dict[str, Any] = {"tokens": ("batch", "seq")}
+        if shape.kind == "train":
+            axes["labels"] = ("batch", "seq")
+        if cfg.family == "vlm" and cfg.num_image_tokens:
+            axes["img_embeds"] = ("batch", "seq", "embed")
+        if cfg.family == "encdec":
+            axes["enc_embeds"] = ("batch", "enc_seq", "embed")
+        return axes
+    lm = LM(cfg)
+    cache = lm.init_cache(shape.global_batch, shape.seq_len, abstract=True)
+    cache_axes = transformer.cache_logical_axes(cfg, cache) \
+        if cfg.family != "encdec" else jax.tree.map_with_path(
+            lambda p, l: ("layers", "batch", "kv_seq", "kv_heads", None), cache)
+    return {"tokens": ("batch", None), "cache": cache_axes,
+            "cache_index": ()}
+
+
+def make_batch(cfg: ModelConfig, shape_or_bs, seq_len: int = 0, rng=None,
+               dtype=jnp.bfloat16):
+    """Concrete random batch (smoke tests / examples)."""
+    import numpy as np
+    if isinstance(shape_or_bs, ShapeConfig):
+        b, s = shape_or_bs.global_batch, shape_or_bs.seq_len
+    else:
+        b, s = shape_or_bs, seq_len
+    rng = np.random.default_rng(0 if rng is None else rng)
+    st = text_len(cfg, s)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, st)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, st)), jnp.int32),
+    }
+    if cfg.family == "vlm" and cfg.num_image_tokens:
+        batch["img_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (b, cfg.num_image_tokens, cfg.d_model)), dtype)
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (b, s // cfg.enc_ratio, cfg.d_model)), dtype)
+    return batch

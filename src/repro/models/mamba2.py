@@ -1,0 +1,192 @@
+"""Mamba2 block (state-space duality / SSD) — chunked-parallel train form +
+exact recurrent decode.
+
+Train/prefill uses the SSD chunked algorithm (Dao & Gu 2024): intra-chunk
+attention-like matmuls (MXU-friendly) + an inter-chunk ``lax.scan`` over the
+running (H, P, N) state.  All decay terms are computed as exp of non-positive
+cumulative sums — numerically stable in f32.
+
+Decode carries (conv_state (B, w-1, din+2N), ssm_state (B, H, P, N)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P, rms_norm
+from repro.parallel.sharding import constrain
+
+
+def mamba_spec(cfg):
+    d, din, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv_dim
+    return {
+        "wz": {"kernel": P((d, din), ("embed", "mamba_inner"))},
+        "wx": {"kernel": P((d, din), ("embed", "mamba_inner"))},
+        "wB": {"kernel": P((d, n), ("embed", "state"))},
+        "wC": {"kernel": P((d, n), ("embed", "state"))},
+        "wdt": {"kernel": P((d, h), ("embed", "mamba_heads"))},
+        "conv_x": P((w, din), ("conv", "mamba_inner"), init="uniform_conv"),
+        "conv_B": P((w, n), ("conv", "state"), init="uniform_conv"),
+        "conv_C": P((w, n), ("conv", "state"), init="uniform_conv"),
+        "A_log": P((h,), ("mamba_heads",), init="a_log", pin_dtype=True),
+        "D": P((h,), ("mamba_heads",), init="ones", pin_dtype=True),
+        "dt_bias": P((h,), ("mamba_heads",), init="dt_bias", pin_dtype=True),
+        "norm": {"scale": P((din,), ("mamba_inner",), init="ones",
+                            pin_dtype=True)},
+        "wo": {"kernel": P((din, d), ("mamba_inner", "embed"))},
+    }
+
+
+def _causal_conv(x, kernel, state=None):
+    """Depthwise causal conv via shift-and-add.  x: (B,S,C); kernel: (w,C).
+    state: (B, w-1, C) trailing inputs from the previous segment (decode)."""
+    w = kernel.shape[0]
+    pad = state if state is not None else jnp.zeros(
+        (x.shape[0], w - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * kernel[i].astype(x.dtype)
+            for i in range(w))
+    new_state = xp[:, -(w - 1):, :] if w > 1 else pad
+    return y, new_state
+
+
+def _segsum_decay(dAc):
+    """dAc: (B,NC,Q,H) -> pairwise decay exp(cs_i - cs_j) masked j<=i,
+    returned as (B,NC,Q_i,Q_j,H).  All exponents <= 0 (stable)."""
+    cs = jnp.cumsum(dAc, axis=2)
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]
+    q = dAc.shape[2]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0), cs
+
+
+def ssd_chunked(X, dA, Bm, Cm, chunk: int, initial_state=None,
+                return_final: bool = False):
+    """X: (B,S,H,P) (already dt-scaled); dA: (B,S,H) (= dt*A, negative);
+    Bm, Cm: (B,S,N).  Returns Y (B,S,H,P) [, final_state (B,H,P,N)]."""
+    b, s, h, p = X.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, s)
+    s_orig = s
+    if s % chunk:
+        # pad with no-op steps (dA=0 -> decay 1, B=0 -> no state update); padded
+        # steps are at the end so they affect neither outputs nor the state
+        pad = chunk - s % chunk
+        X = jnp.pad(X, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    Xc = X.reshape(b, nc, chunk, h, p)
+    dAc = dA.astype(jnp.float32).reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, n)
+    Cc = Cm.reshape(b, nc, chunk, n)
+
+    L, cs = _segsum_decay(dAc)                               # (b,nc,i,j,h)
+    att = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+    M = att[..., None] * L                                    # (b,nc,i,j,h)
+    Ydiag = jnp.einsum("bcijh,bcjhp->bcihp", M.astype(X.dtype), Xc)
+
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)             # (b,nc,j,h)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc,
+                        decay_to_end.astype(X.dtype), Xc)     # (b,nc,h,p,n)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                    # (b,nc,h)
+
+    init = (initial_state if initial_state is not None
+            else jnp.zeros((b, h, p, n), jnp.float32))
+
+    def step(hprev, inp):
+        st, dec = inp
+        hnew = hprev * dec[:, :, None, None] + st.astype(jnp.float32)
+        return hnew, hprev
+
+    xs = (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    h_final, h_starts = jax.lax.scan(step, init, xs)
+    h_starts = h_starts.swapaxes(0, 1)                        # (b,nc,h,p,n)
+
+    Yoff = jnp.einsum("bcin,bcih,bchpn->bcihp", Cc,
+                      jnp.exp(cs).astype(X.dtype),
+                      h_starts.astype(X.dtype))
+    Y = (Ydiag + Yoff).reshape(b, s, h, p)[:, :s_orig]
+    if return_final:
+        return Y, h_final
+    return Y
+
+
+def mamba_block(p, cfg, x, *, conv_state=None, ssm_state=None,
+                decode: bool = False, impl: str = "xla",
+                tp_shardmap: bool = False):
+    """x: (B,S,d).  Train/prefill when decode=False (returns (y, states) with
+    states=(conv_state, ssm_state) if requested via decode-compatible callers);
+    decode=True runs the exact single-step recurrence (S must be 1)."""
+    b, s, d = x.shape
+    din, n, h_cnt = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_head_dim
+    dtype = x.dtype
+
+    if tp_shardmap:
+        # column-parallel in-projections: backward dx psums run in bf16
+        # through the shard_map instead of GSPMD's f32 (§Perf zamba it3)
+        from repro.parallel.tpmm import col_proj_tp
+        z = col_proj_tp(x, p["wz"]["kernel"])
+        xs = col_proj_tp(x, p["wx"]["kernel"])
+    else:
+        z = jnp.einsum("bsd,de->bse", x, p["wz"]["kernel"].astype(dtype))
+        xs = jnp.einsum("bsd,de->bse", x, p["wx"]["kernel"].astype(dtype))
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"]["kernel"].astype(dtype))
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"]["kernel"].astype(dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"]["kernel"].astype(dtype))
+
+    # three separate depthwise convs: xs is model-sharded (mamba_inner) while
+    # B/C are replicated — a fused concat would force GSPMD to reshard the
+    # (B,S,din) activation every layer (§Perf zamba2 iteration 1)
+    cs_x = conv_state[..., :din] if conv_state is not None else None
+    cs_b = conv_state[..., din:din + n] if conv_state is not None else None
+    cs_c = conv_state[..., din + n:] if conv_state is not None else None
+    xs, ncs_x = _causal_conv(xs, p["conv_x"], cs_x)
+    Bm, ncs_b = _causal_conv(Bm, p["conv_B"], cs_b)
+    Cm, ncs_c = _causal_conv(Cm, p["conv_C"], cs_c)
+    new_conv_state = jnp.concatenate([ncs_x, ncs_b, ncs_c], axis=-1)
+    xs = jax.nn.silu(xs)
+    Bm = jax.nn.silu(Bm)
+    Cm = jax.nn.silu(Cm)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,)
+    dA = dt * A                                                # <= 0
+    X = xs.reshape(b, s, h_cnt, pdim)
+    X = constrain(X, ("batch", "seq", "mamba_heads", None))
+    Xdt = X * dt[..., None].astype(dtype)
+
+    if not decode:
+        if impl == "pallas" and ssm_state is None:
+            from repro.kernels import ops as kops
+            Y = kops.mamba2_ssd(Xdt, dA, Bm, Cm, chunk=cfg.ssm_chunk)
+            final_state = jnp.zeros((b, h_cnt, pdim, n), jnp.float32)
+        else:
+            Y, final_state = ssd_chunked(Xdt, dA, Bm, Cm, cfg.ssm_chunk,
+                                         initial_state=ssm_state,
+                                         return_final=True)
+    else:
+        assert s == 1
+        st = ssm_state if ssm_state is not None else jnp.zeros(
+            (b, h_cnt, pdim, n), jnp.float32)
+        dec = jnp.exp(dA[:, 0, :])                             # (B,H)
+        upd = jnp.einsum("bn,bhp->bhpn", Bm[:, 0].astype(jnp.float32),
+                         Xdt[:, 0].astype(jnp.float32))
+        final_state = st * dec[:, :, None, None] + upd
+        Y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32),
+                       final_state)[:, None].astype(dtype)
+
+    Y = Y + p["D"].astype(dtype)[None, None, :, None] * X
+    Y = Y.reshape(b, s, din)
+    Y = rms_norm(Y * jax.nn.silu(z), p["norm"]["scale"], cfg.norm_eps)
+    if tp_shardmap:
+        from repro.parallel.tpmm import down_proj_tp
+        out = down_proj_tp(Y, p["wo"]["kernel"])
+    else:
+        out = jnp.einsum("bse,ed->bsd", Y, p["wo"]["kernel"].astype(dtype))
+    return out, (new_conv_state, final_state)

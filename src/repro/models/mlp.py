@@ -1,0 +1,51 @@
+"""Dense FFN: SwiGLU (silu) or classic 2-matmul (gelu) — matches cfg.act."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.models.common import P, activation
+from repro.parallel.sharding import constrain
+
+
+def mlp_spec(cfg, d_ff: int = 0):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    depth_scale = 0.02 / math.sqrt(2 * max(cfg.num_layers, 1))
+    spec = {
+        "wi": {"kernel": P((d, f), ("embed", "mlp"))},
+        "wo": {"kernel": P((f, d), ("mlp", "embed"), scale=depth_scale)},
+    }
+    if cfg.act == "silu":
+        spec["wg"] = {"kernel": P((d, f), ("embed", "mlp"))}
+    if cfg.use_bias:
+        spec["wi"]["bias"] = P((f,), ("mlp",), init="zeros")
+        spec["wo"]["bias"] = P((d,), ("embed",), init="zeros")
+        if "wg" in spec:
+            spec["wg"]["bias"] = P((f,), ("mlp",), init="zeros")
+    return spec
+
+
+def mlp(p, cfg, x, tp_shardmap: bool = False):
+    dtype = x.dtype
+    act = activation(cfg.act)
+    if tp_shardmap:
+        from repro.parallel.tpmm import col_proj_tp
+        up = lambda q: col_proj_tp(x, q["kernel"], q.get("bias"))
+    else:
+        def up(q):
+            y = jnp.einsum("bsd,df->bsf", x, q["kernel"].astype(dtype))
+            return y + q["bias"].astype(dtype) if "bias" in q else y
+    h = up(p["wi"])
+    if "wg" in p:
+        h = act(up(p["wg"])) * h
+    else:
+        h = act(h)
+    h = constrain(h, ("batch", "seq", "mlp"))
+    if tp_shardmap:
+        from repro.parallel.tpmm import down_proj_tp
+        return down_proj_tp(h, p["wo"]["kernel"], p["wo"].get("bias"))
+    y = jnp.einsum("bsf,fd->bsd", h, p["wo"]["kernel"].astype(dtype))
+    if "bias" in p["wo"]:
+        y = y + p["wo"]["bias"].astype(dtype)
+    return y

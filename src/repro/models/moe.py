@@ -1,0 +1,120 @@
+"""Mixture-of-Experts with TPU-native capacity-based dispatch.
+
+Hardware adaptation (see DESIGN.md §5): GPU MoE stacks use ragged/megablocks
+GEMMs; the TPU-idiomatic form is capacity-based dispatch into dense per-expert
+buffers so the expert compute is one batched MXU GEMM, with expert parallelism
+over the ``model`` mesh axis (all-to-all inserted by GSPMD at the
+token-sharded -> expert-sharded boundary).
+
+Memory-lean dispatch: instead of the GShard (G,S,E,C) one-hot einsum tensor
+(O(S·E·C) — terabytes at our shapes) we compute per-token capacity positions
+with one int32 cumsum over a flattened (S·k, E) one-hot, then scatter-add the
+k routing slots in a python loop (k ≤ 6), so peak transient memory is O(S·E)
+int32 + O(E·C·d) buffers.  Tokens over capacity are dropped (standard GShard
+semantics, capacity_factor 1.25).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P, activation
+from repro.models.mlp import mlp, mlp_spec
+from repro.parallel.sharding import constrain
+
+
+def moe_spec(cfg):
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    spec = {
+        "router": {"kernel": P((d, e), ("embed", "expert"), scale=0.02,
+                               dtype="float32")},
+        "wi": {"kernel": P((e, d, f), ("expert", "embed", "mlp"))},
+        "wg": {"kernel": P((e, d, f), ("expert", "embed", "mlp"))},
+        "wo": {"kernel": P((e, f, d), ("expert", "mlp", "embed"))},
+    }
+    if cfg.dense_residual:
+        spec["dense"] = mlp_spec(cfg)
+    return spec
+
+
+def _capacity(tokens_per_group: int, cfg) -> int:
+    c = tokens_per_group * cfg.experts_per_token / cfg.num_experts
+    return max(math.ceil(c * cfg.capacity_factor), cfg.experts_per_token)
+
+
+def route(router_p, cfg, xg):
+    """xg: (G, S, d) -> gates (G,S,k) f32, expert ids (G,S,k) i32, aux loss."""
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        router_p["kernel"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)  # renorm
+    # Switch/GShard load-balance loss
+    e = cfg.num_experts
+    density = jnp.mean(jax.nn.one_hot(ids[..., 0], e, dtype=jnp.float32), axis=1)
+    density_proxy = jnp.mean(probs, axis=1)
+    aux = jnp.mean(density * density_proxy) * (e * e)
+    return gates, ids, aux
+
+
+def moe_ffn(p, cfg, x, groups: int = 0):
+    """x: (B, S, d).  Groups default to B (capacity computed per sequence)."""
+    b, s, d = x.shape
+    g = groups or b
+    xg = x.reshape(g, (b * s) // g, d)
+    xg = constrain(xg, ("moe_group", "seq", "embed"))
+    sg = xg.shape[1]
+    k, e = cfg.experts_per_token, cfg.num_experts
+    cap = _capacity(sg, cfg)
+
+    gates, ids, aux = route(p["router"], cfg, xg)
+
+    # --- capacity positions: cumsum over flattened (k*Sg, E) one-hot ----------
+    # slot-major order: every token's 1st choice outranks any 2nd choice
+    # (GShard priority semantics).
+    ids_sm = ids.transpose(0, 2, 1).reshape(g, k * sg)
+    onehot = jax.nn.one_hot(ids_sm, e, dtype=jnp.int32)     # (G, k*Sg, E)
+    pos_in_expert = jnp.cumsum(onehot, axis=1) - onehot     # exclusive count
+    pos = jnp.take_along_axis(
+        pos_in_expert, ids_sm[..., None], axis=-1)[..., 0]  # (G, k*Sg)
+    pos = pos.reshape(g, k, sg).transpose(0, 2, 1)          # (G, Sg, k)
+    keep = (pos < cap).astype(xg.dtype) * (gates > 0).astype(xg.dtype)
+
+    # --- dispatch: k scatter-adds into (G, E*cap, d) buffers -------------------
+    buf = jnp.zeros((g, e * cap, d), xg.dtype)
+    flat_idx = ids * cap + jnp.minimum(pos, cap - 1)        # (G, Sg, k)
+    for j in range(k):
+        upd = xg * keep[..., j, None]
+        buf = jax.vmap(lambda bfr, ix, u: bfr.at[ix].add(u))(
+            buf, flat_idx[..., j], upd)
+    buf = constrain(buf.reshape(g, e, cap, d),
+                    ("moe_group", "expert", None, "embed"))
+
+    # --- expert FFN: batched GEMMs over the expert-parallel axis ---------------
+    dtype = x.dtype
+    act = activation(cfg.act)
+    hi = jnp.einsum("gecd,edf->gecf", buf, p["wi"]["kernel"].astype(dtype))
+    hg = jnp.einsum("gecd,edf->gecf", buf, p["wg"]["kernel"].astype(dtype))
+    h = act(hg) * hi
+    h = constrain(h, ("moe_group", "expert", None, "mlp"))
+    out = jnp.einsum("gecf,efd->gecd", h, p["wo"]["kernel"].astype(dtype))
+    out = constrain(out, ("moe_group", "expert", None, "embed"))
+    out_flat = out.reshape(g, e * cap, d)
+
+    # --- combine: k weighted gathers -------------------------------------------
+    y = jnp.zeros_like(xg)
+    for j in range(k):
+        gathered = jax.vmap(lambda o, ix: o[ix])(out_flat, flat_idx[..., j])
+        y = y + gathered * (gates[..., j, None].astype(dtype) * keep[..., j, None])
+
+    y = y.reshape(b, s, d)
+    if "dense" in p:   # arctic: dense residual path in parallel
+        y = y + mlp(p["dense"], cfg, x)
+    return y, aux
+
+
+def moe_ffn_decode(p, cfg, x):
+    """Decode-time MoE: one global group over the batch of single tokens."""
+    return moe_ffn(p, cfg, x, groups=1)

@@ -1,0 +1,220 @@
+"""RWKV6 ("Finch") block: token-shift with data-dependent mixing, WKV6
+recurrence with per-channel data-dependent decay, and channel-mix FFN.
+
+Train/prefill uses a chunked-parallel linear-attention form.  Stability: with
+the per-step log-decay floored at ``LOG_DECAY_FLOOR`` (documented deviation,
+applied identically in every path incl. the ref oracle and decode so all paths
+agree), the intra-chunk rank-1 exponent split around the chunk midpoint is
+exact in f32 for chunk length 32 (|exponent| <= 40 by construction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P, layer_norm
+from repro.parallel.sharding import constrain
+
+LORA_MIX = 32
+LORA_DECAY = 64
+LOG_DECAY_FLOOR = -2.5     # per-step log-decay floor (w >= e^-2.5 ≈ 0.082)
+CHUNK = 32
+
+
+def tmix_spec(cfg):
+    d = cfg.d_model
+    h, k = cfg.rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "mu_x": P((d,), ("embed",), init="zeros", pin_dtype=True),
+        "mu": P((5, d), (None, "embed"), init="zeros", pin_dtype=True),
+        "W1": {"kernel": P((d, 5 * LORA_MIX), ("embed", "lora"))},
+        "W2": {"kernel": P((5, LORA_MIX, d), (None, "lora", "embed"))},
+        "wr": {"kernel": P((d, d), ("embed", "rwkv_heads"))},
+        "wk": {"kernel": P((d, d), ("embed", "rwkv_heads"))},
+        "wv": {"kernel": P((d, d), ("embed", "rwkv_heads"))},
+        "wg": {"kernel": P((d, d), ("embed", "rwkv_heads"))},
+        "w0": P((d,), ("embed",), init="rwkv_decay", pin_dtype=True),
+        "wA": {"kernel": P((d, LORA_DECAY), ("embed", "lora"))},
+        "wB": {"kernel": P((LORA_DECAY, d), ("lora", "embed"))},
+        "u": P((h, k), ("rwkv_heads", None), init="normal", scale=0.3,
+               pin_dtype=True),
+        "ln_x": {"scale": P((d,), ("embed",), init="ones", pin_dtype=True),
+                 "bias": P((d,), ("embed",), init="zeros", pin_dtype=True)},
+        "wo": {"kernel": P((d, d), ("rwkv_heads", "embed"))},
+    }
+
+
+def cmix_spec(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": P((d,), ("embed",), init="zeros", pin_dtype=True),
+        "mu_r": P((d,), ("embed",), init="zeros", pin_dtype=True),
+        "wk": {"kernel": P((d, f), ("embed", "mlp"))},
+        "wv": {"kernel": P((f, d), ("mlp", "embed"))},
+        "wr": {"kernel": P((d, d), ("embed", "rwkv_heads"))},
+    }
+
+
+def _shift(x, shift_state=None):
+    """Previous-token embedding; shift_state (B,1,d) seeds t=0 (decode)."""
+    pad = shift_state if shift_state is not None else jnp.zeros(
+        (x.shape[0], 1, x.shape[2]), x.dtype)
+    return jnp.concatenate([pad.astype(x.dtype), x[:, :-1, :]], axis=1)
+
+
+# ------------------------------------------------------------ wkv recurrence --
+
+def wkv6_chunked(r, k, v, lw, u, chunk: int = CHUNK, initial_state=None,
+                 return_final: bool = False):
+    """r,k,lw: (B,S,H,K); v: (B,S,H,V); u: (H,K); lw = log decay (<= 0,
+    floored).  Recurrence: S_t = diag(w_t) S_{t-1} + k_t v_t^T;
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)."""
+    b, s, h, kd = r.shape
+    vd = v.shape[-1]
+    chunk = min(chunk, s)
+    s_orig = s
+    if s % chunk:
+        # pad with no-op steps (lw=0 -> decay 1, k=0 -> no state update)
+        pad = chunk - s % chunk
+        r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (r, k, v))
+        lw = jnp.pad(lw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    rc = r.reshape(b, nc, chunk, h, kd)
+    kc = k.reshape(b, nc, chunk, h, kd)
+    vc = v.reshape(b, nc, chunk, h, vd)
+    lwc = lw.astype(jnp.float32).reshape(b, nc, chunk, h, kd)
+
+    cs = jnp.cumsum(lwc, axis=2)                  # inclusive: sum_{l<=i} lw_l
+    ce = cs - lwc                                 # exclusive: sum_{l<i} lw_l
+    mid = cs[:, :, -1:, :, :] * 0.5               # per-chunk midpoint M
+    # rank-1 split: exp(ce_i - cs_j) = exp(ce_i - M) * exp(M - cs_j)
+    qf = rc.astype(jnp.float32) * jnp.exp(jnp.clip(ce - mid, -40.0, 40.0))
+    kf = kc.astype(jnp.float32) * jnp.exp(jnp.clip(mid - cs, -40.0, 40.0))
+    A = jnp.einsum("bcihk,bcjhk->bchij", qf, kf)  # strictly-lower part valid
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    A = jnp.where(tri[None, None, None], A, 0.0)
+    # diagonal bonus: o_i += r_i (u ⊙ k_i) v_i
+    diag = jnp.einsum("bcihk,hk,bcihk->bcih", rc.astype(jnp.float32),
+                      u.astype(jnp.float32), kc.astype(jnp.float32))
+    Yintra = jnp.einsum("bchij,bcjhv->bcihv", A, vc.astype(jnp.float32))
+    Yintra = Yintra + diag[..., None] * vc.astype(jnp.float32)
+
+    # chunk summary: S_end = diag(exp(cs_end)) S_start + sum_j diag(exp(cs_end - cs_j)) k_j v_j
+    dte = jnp.exp(cs[:, :, -1:, :, :] - cs)       # decay j -> chunk end, <= 1
+    chunk_kv = jnp.einsum("bcjhk,bcjhv->bchkv", (kc.astype(jnp.float32) * dte),
+                          vc.astype(jnp.float32))
+    chunk_decay = jnp.exp(cs[:, :, -1, :, :])     # (b,nc,h,k)
+
+    init = (initial_state if initial_state is not None
+            else jnp.zeros((b, h, kd, vd), jnp.float32))
+
+    def step(sprev, inp):
+        ckv, dec = inp
+        snew = sprev * dec[..., None] + ckv
+        return snew, sprev
+
+    xs = (chunk_kv.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    s_final, s_starts = jax.lax.scan(step, init, xs)
+    s_starts = s_starts.swapaxes(0, 1)            # (b,nc,h,k,v)
+
+    # inter-chunk: o_i += (r_i ⊙ exp(ce_i)) · S_start
+    Yinter = jnp.einsum("bcihk,bchkv->bcihv",
+                        rc.astype(jnp.float32) * jnp.exp(ce), s_starts)
+    Y = (Yintra + Yinter).reshape(b, s, h, vd)[:, :s_orig]
+    if return_final:
+        return Y, s_final
+    return Y
+
+
+def wkv6_decode(r, k, v, lw, u, state):
+    """Single step.  r,k,lw: (B,H,K); v: (B,H,V); state: (B,H,K,V)."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    a = kf[..., :, None] * vf[..., None, :]            # (B,H,K,V)
+    out = jnp.einsum("bhk,bhkv->bhv", rf, state + u.astype(jnp.float32)[None, :, :, None] * a)
+    new_state = state * jnp.exp(lw.astype(jnp.float32))[..., None] + a
+    return out, new_state
+
+
+# ------------------------------------------------------------------ blocks ----
+
+def _mix_inputs(p, x, sx):
+    """Data-dependent token-shift mixing -> per-target inputs [r,w,k,v,g]."""
+    dtype = x.dtype
+    xxx = x + sx * p["mu_x"].astype(dtype)
+    m = jnp.tanh(jnp.einsum("bsd,dl->bsl", xxx, p["W1"]["kernel"].astype(dtype)))
+    m = m.reshape(*m.shape[:-1], 5, LORA_MIX)
+    m = jnp.einsum("bstl,tld->bstd", m, p["W2"]["kernel"].astype(dtype))
+    mix = p["mu"].astype(dtype)[None, None] + m        # (B,S,5,d)
+    return [x + sx * mix[:, :, t] for t in range(5)]
+
+
+def tmix_block(p, cfg, x, *, shift_state=None, wkv_state=None,
+               decode: bool = False, impl: str = "xla"):
+    """Returns (y, (new_shift_state, new_wkv_state))."""
+    b, s, d = x.shape
+    h, kd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    dtype = x.dtype
+    sx = _shift(x, shift_state) - x
+    xr, xw, xk, xv, xg = _mix_inputs(p, x, sx)
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]["kernel"].astype(dtype))
+    kk = jnp.einsum("bsd,de->bse", xk, p["wk"]["kernel"].astype(dtype))
+    vv = jnp.einsum("bsd,de->bse", xv, p["wv"]["kernel"].astype(dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]["kernel"].astype(dtype)))
+
+    dec_in = (p["w0"].astype(jnp.float32)
+              + jnp.einsum("bsd,dl->bsl", xw, p["wA"]["kernel"].astype(dtype))
+                   .astype(jnp.float32)
+              @ p["wB"]["kernel"].astype(jnp.float32))
+    # log decay, floored (see module docstring)
+    lw = -jnp.exp(jnp.clip(dec_in, -12.0, 0.0))
+    lw = jnp.maximum(lw, LOG_DECAY_FLOOR)
+
+    rh = r.reshape(b, s, h, kd)
+    kh = kk.reshape(b, s, h, kd)
+    vh = vv.reshape(b, s, h, kd)
+    lwh = lw.reshape(b, s, h, kd)
+    rh = constrain(rh, ("batch", "seq", "rwkv_heads", None))
+
+    new_shift = x[:, -1:, :]
+    if decode:
+        assert s == 1
+        st = wkv_state if wkv_state is not None else jnp.zeros(
+            (b, h, kd, kd), jnp.float32)
+        out, new_state = wkv6_decode(rh[:, 0], kh[:, 0], vh[:, 0], lwh[:, 0],
+                                     p["u"], st)
+        out = out[:, None]
+    elif impl == "pallas" and wkv_state is None:
+        from repro.kernels import ops as kops
+        out = kops.rwkv6_wkv(rh, kh, vh, lwh, p["u"], chunk=CHUNK)
+        new_state = jnp.zeros((b, h, kd, kd), jnp.float32)
+    else:
+        out, new_state = wkv6_chunked(rh, kh, vh, lwh, p["u"],
+                                      initial_state=wkv_state,
+                                      return_final=True)
+
+    out = out.reshape(b, s, d).astype(dtype)
+    # per-head group norm (ln_x)
+    out = out.reshape(b, s, h, kd)
+    mu = out.mean(-1, keepdims=True)
+    var = jnp.var(out.astype(jnp.float32), axis=-1, keepdims=True)
+    out = ((out - mu) * jax.lax.rsqrt(var + 64e-5).astype(dtype)).reshape(b, s, d)
+    out = out * p["ln_x"]["scale"].astype(dtype) + p["ln_x"]["bias"].astype(dtype)
+    out = out * g
+    y = jnp.einsum("bse,ed->bsd", out, p["wo"]["kernel"].astype(dtype))
+    return y, (new_shift, new_state)
+
+
+def cmix_block(p, cfg, x, *, shift_state=None):
+    dtype = x.dtype
+    sx = _shift(x, shift_state) - x
+    xk = x + sx * p["mu_k"].astype(dtype)
+    xr = x + sx * p["mu_r"].astype(dtype)
+    kk = jnp.einsum("bsd,df->bsf", xk, p["wk"]["kernel"].astype(dtype))
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["wv"]["kernel"].astype(dtype))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr,
+                                   p["wr"]["kernel"].astype(dtype)))
+    return rr * vv, x[:, -1:, :]

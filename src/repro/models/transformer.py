@@ -1,0 +1,483 @@
+"""Decoder-only transformer stack covering dense / moe / ssm / hybrid / vlm.
+
+Layers are stacked along a leading axis and applied with ``lax.scan`` (HLO
+stays O(1) in depth — required to compile 126-layer configs) with a
+configurable remat policy.  Three entry points share the weights:
+
+* ``forward``      — full-sequence (train; prefill when ``collect_cache``)
+* ``decode_step``  — one token, updating the per-layer cache pytree
+* ``init_cache``   — (abstract) cache construction
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2, mlp as mlp_mod, moe as moe_mod, rwkv6
+from repro.models.common import (P, apply_norm, norm_spec, set_dtypes,
+                                 stack_spec)
+from repro.parallel.sharding import constrain
+
+
+@dataclass(frozen=True)
+class ForwardOpts:
+    attn_impl: str = "blockwise"     # dense | blockwise | pallas
+    mixer_impl: str = "xla"          # xla | pallas  (mamba2 SSD / rwkv6 WKV)
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    scan_layers: bool = True
+    remat: str = "selective"         # none | selective | full
+    flat_heads: bool = False         # repeat-KV flat head sharding (§Perf)
+    tp_shardmap: bool = False        # explicit bf16-psum TP contractions (§Perf)
+    moe_ep: bool = False             # shard_map all_to_all expert parallel (§Perf)
+    # the residual stream is constrained with the "seq_sp" logical axis;
+    # mapping it to "model" in the rules enables Megatron-style sequence
+    # parallelism (reduce-scatter/all-gather instead of all-reduce)
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn, prevent_cse=False)
+    if policy == "selective":
+        from repro.parallel.tpmm import TP_SAVE_NAME
+        pol = jax.checkpoint_policies.save_from_both_policies(
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            jax.checkpoint_policies.save_only_these_names(TP_SAVE_NAME))
+        return jax.checkpoint(fn, policy=pol, prevent_cse=False)
+    raise ValueError(policy)
+
+
+# ------------------------------------------------------------------- specs ----
+
+def layer_spec(cfg):
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return {"ln1": norm_spec(cfg), "attn": attn.attention_spec(cfg),
+                "ln2": norm_spec(cfg), "mlp": mlp_mod.mlp_spec(cfg)}
+    if fam == "moe":
+        return {"ln1": norm_spec(cfg), "attn": attn.attention_spec(cfg),
+                "ln2": norm_spec(cfg), "moe": moe_mod.moe_spec(cfg)}
+    if fam == "ssm":
+        return {"ln1": norm_spec(cfg), "tmix": rwkv6.tmix_spec(cfg),
+                "ln2": norm_spec(cfg), "cmix": rwkv6.cmix_spec(cfg)}
+    if fam == "hybrid":
+        return {"ln1": norm_spec(cfg), "mamba": mamba2.mamba_spec(cfg)}
+    raise ValueError(fam)
+
+
+def shared_block_spec(cfg):
+    """Zamba2-style shared attention+FFN block (weights tied across uses)."""
+    d = cfg.d_model
+    return {
+        "in_proj": {"kernel": P((2 * d, d), (None, "embed"))},
+        "ln1": norm_spec(cfg), "attn": attn.attention_spec(cfg),
+        "ln2": norm_spec(cfg), "mlp": mlp_mod.mlp_spec(cfg),
+    }
+
+
+def build_spec(cfg):
+    d, v = cfg.d_model, cfg.padded_vocab
+    spec: Dict[str, Any] = {
+        "embed": {"table": P((v, d), ("vocab", "embed"), scale=0.02)},
+        "layers": stack_spec(layer_spec(cfg), cfg.num_layers, "layers"),
+        "final_norm": norm_spec(cfg),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = {"kernel": P((d, v), ("embed", "vocab"))}
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        spec["shared"] = shared_block_spec(cfg)
+    if cfg.family == "vlm" and cfg.num_image_tokens:
+        spec["img_pos"] = P((cfg.num_image_tokens, d), ("img", "embed"),
+                            init="zeros", pin_dtype=True)
+    if cfg.family == "encdec":
+        raise ValueError("use repro.models.encdec for encoder-decoder configs")
+    return set_dtypes(spec, cfg.param_dtype)
+
+
+# ------------------------------------------------------------- layer bodies ---
+
+def _attn_layer(lp, cfg, h, opts: ForwardOpts, collect):
+    a_in = apply_norm(lp["ln1"], h, cfg)
+    # flat_heads repeats KV, so it is disabled when collecting the (grouped)
+    # decode cache during prefill
+    a, kv = attn.attention_block(lp["attn"], cfg, a_in, impl=opts.attn_impl,
+                                 q_chunk=opts.q_chunk, kv_chunk=opts.kv_chunk,
+                                 flat_heads=opts.flat_heads and not collect,
+                                 tp_shardmap=opts.tp_shardmap)
+    h = h + a
+    h = constrain(h, ("batch", "seq_sp", "embed"))
+    f_in = apply_norm(lp["ln2"], h, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in lp:
+        if opts.moe_ep:
+            from repro.parallel.epmoe import moe_ffn_ep
+            f, aux = moe_ffn_ep(lp["moe"], cfg, f_in)
+        else:
+            f, aux = moe_mod.moe_ffn(lp["moe"], cfg, f_in)
+    else:
+        f = mlp_mod.mlp(lp["mlp"], cfg, f_in, tp_shardmap=opts.tp_shardmap)
+    h = h + f
+    h = constrain(h, ("batch", "seq_sp", "embed"))
+    cache = {"k": kv[0], "v": kv[1]} if collect else None
+    return h, aux, cache
+
+
+def _ssm_layer(lp, cfg, h, opts: ForwardOpts, collect):
+    x = apply_norm(lp["ln1"], h, cfg)
+    # pallas path has no final-state output; use it when no cache is collected
+    impl = opts.mixer_impl if not collect else "xla"
+    y, (shift1, wkv) = rwkv6.tmix_block(lp["tmix"], cfg, x, impl=impl)
+    h = h + y
+    x2 = apply_norm(lp["ln2"], h, cfg)
+    y2, shift2 = rwkv6.cmix_block(lp["cmix"], cfg, x2)
+    h = h + y2
+    h = constrain(h, ("batch", "seq", "embed"))
+    cache = ({"shift1": shift1, "wkv": wkv, "shift2": shift2}
+             if collect else None)
+    return h, jnp.zeros((), jnp.float32), cache
+
+
+def _hybrid_layer(lp, cfg, h, opts: ForwardOpts, collect):
+    x = apply_norm(lp["ln1"], h, cfg)
+    impl = opts.mixer_impl if not collect else "xla"
+    y, (conv_st, ssm_st) = mamba2.mamba_block(lp["mamba"], cfg, x, impl=impl,
+                                              tp_shardmap=opts.tp_shardmap)
+    h = h + y
+    h = constrain(h, ("batch", "seq", "embed"))
+    cache = {"conv": conv_st, "ssm": ssm_st} if collect else None
+    return h, jnp.zeros((), jnp.float32), cache
+
+
+def _shared_block(sp, cfg, h, emb0, opts: ForwardOpts, collect):
+    dtype = h.dtype
+    u = jnp.concatenate([h, emb0], axis=-1)
+    u = jnp.einsum("bsd,de->bse", u, sp["in_proj"]["kernel"].astype(dtype))
+    a, kv = attn.attention_block(sp["attn"], cfg, apply_norm(sp["ln1"], u, cfg),
+                                 impl=opts.attn_impl, q_chunk=opts.q_chunk,
+                                 kv_chunk=opts.kv_chunk,
+                                 flat_heads=opts.flat_heads and not collect,
+                                 tp_shardmap=opts.tp_shardmap)
+    u = u + a
+    u = u + mlp_mod.mlp(sp["mlp"], cfg, apply_norm(sp["ln2"], u, cfg),
+                        tp_shardmap=opts.tp_shardmap)
+    cache = {"k": kv[0], "v": kv[1]} if collect else None
+    return h + u, cache
+
+
+_LAYER_FNS = {"dense": _attn_layer, "vlm": _attn_layer, "moe": _attn_layer,
+              "ssm": _ssm_layer, "hybrid": _hybrid_layer}
+
+
+def _n_shared(cfg) -> int:
+    if cfg.family != "hybrid" or not cfg.hybrid_attn_every:
+        return 0
+    return cfg.num_layers // cfg.hybrid_attn_every
+
+
+# ----------------------------------------------------------------- forward ----
+
+def embed_inputs(params, cfg, batch):
+    """Token (+ image-stub) embedding.  Returns h (B, S_total, d)."""
+    table = params["embed"]["table"]
+    dtype = jnp.dtype(cfg.dtype)
+    h = jnp.take(table, batch["tokens"], axis=0).astype(dtype)
+    if cfg.family == "vlm" and cfg.num_image_tokens:
+        img = batch["img_embeds"].astype(dtype)
+        img = img + params["img_pos"].astype(dtype)[None]
+        h = jnp.concatenate([img, h], axis=1)
+    return constrain(h, ("batch", "seq", "embed"))
+
+
+def unembed(params, cfg, h):
+    dtype = h.dtype
+    h = apply_norm(params["final_norm"], h, cfg)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h,
+                            params["embed"]["table"].astype(dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h,
+                            params["lm_head"]["kernel"].astype(dtype))
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def forward(params, cfg, batch, opts: ForwardOpts = ForwardOpts(),
+            collect_cache: bool = False):
+    """Full-sequence forward.  Returns (logits, aux, cache|None)."""
+    h = embed_inputs(params, cfg, batch)
+    emb0 = h if cfg.family == "hybrid" and cfg.hybrid_attn_every else None
+    layer_fn = _LAYER_FNS[cfg.family]
+    every = cfg.hybrid_attn_every
+    n_shared = _n_shared(cfg)
+
+    def body(carry, xs):
+        lp, idx = xs
+        if cfg.family == "hybrid" and every:
+            h, shared_cache = carry
+            h, aux, cache = layer_fn(lp, cfg, h, opts, collect_cache)
+
+            def fire(args):
+                h, sc = args
+                h2, blk_cache = _shared_block(params["shared"], cfg, h, emb0,
+                                              opts, collect_cache)
+                if collect_cache:
+                    inv = idx // every
+                    sc = {
+                        "k": jax.lax.dynamic_update_index_in_dim(
+                            sc["k"], blk_cache["k"], inv, 0),
+                        "v": jax.lax.dynamic_update_index_in_dim(
+                            sc["v"], blk_cache["v"], inv, 0),
+                    }
+                return h2, sc
+
+            if isinstance(idx, int):
+                # unrolled layers: static branch — no lax.cond, which would
+                # copy the whole shared cache through both branches every
+                # layer (observed 1 TB/step bytes on zamba decode; §Perf)
+                if (idx % every) == every - 1:
+                    h, shared_cache = fire((h, shared_cache))
+            else:
+                h, shared_cache = jax.lax.cond(
+                    (idx % every) == every - 1, fire, lambda a: a,
+                    (h, shared_cache))
+            return (h, shared_cache), (aux, cache)
+        h = carry
+        h, aux, cache = layer_fn(lp, cfg, h, opts, collect_cache)
+        return h, (aux, cache)
+
+    body = _remat(body, opts.remat)
+    idxs = jnp.arange(cfg.num_layers)
+
+    if cfg.family == "hybrid" and every:
+        b, s = h.shape[0], h.shape[1]
+        sc0 = None
+        if collect_cache:
+            kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+            sc0 = {"k": jnp.zeros((n_shared, b, s, kvh, hd), h.dtype),
+                   "v": jnp.zeros((n_shared, b, s, kvh, hd), h.dtype)}
+        init = (h, sc0)
+    else:
+        init = h
+
+    if opts.scan_layers:
+        carry, (auxs, caches) = jax.lax.scan(body, init,
+                                             (params["layers"], idxs))
+    else:
+        auxs, caches = [], []
+        carry = init
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            carry, (aux, cache) = body(carry, (lp, i))
+            auxs.append(aux)
+            caches.append(cache)
+        auxs = jnp.stack(auxs)
+        caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+                  if collect_cache else None)
+
+    if cfg.family == "hybrid" and every:
+        h, shared_cache = carry
+    else:
+        h, shared_cache = carry, None
+
+    logits = unembed(params, cfg, h)
+    aux = {"moe_aux": jnp.sum(auxs)}
+    cache = None
+    if collect_cache:
+        cache = {"layers": caches}
+        if shared_cache is not None:
+            cache["shared"] = shared_cache
+    return logits, aux, cache
+
+
+# ------------------------------------------------------------------ decode ----
+
+def init_cache(cfg, batch_size: int, max_seq: int, dtype=jnp.bfloat16,
+               abstract: bool = False):
+    """Cache pytree for decode.  abstract=True -> ShapeDtypeStructs (dry-run)."""
+    L, b, s = cfg.num_layers, batch_size, max_seq
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def mk(shape, dt=dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        layers = {"k": mk((L, b, s, kvh, hd)), "v": mk((L, b, s, kvh, hd))}
+    elif fam == "ssm":
+        d, h_, kd = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim
+        layers = {"shift1": mk((L, b, 1, d)),
+                  "wkv": mk((L, b, h_, kd, kd), jnp.float32),
+                  "shift2": mk((L, b, 1, d))}
+    elif fam == "hybrid":
+        din, n, hn, pd = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                          cfg.ssm_head_dim)
+        w = cfg.ssm_conv_dim
+        layers = {"conv": mk((L, b, w - 1, din + 2 * n)),
+                  "ssm": mk((L, b, hn, pd, n), jnp.float32)}
+    else:
+        raise ValueError(fam)
+    cache = {"layers": layers}
+    if fam == "hybrid" and cfg.hybrid_attn_every:
+        ns = _n_shared(cfg)
+        cache["shared"] = {"k": mk((ns, b, s, kvh, hd)),
+                           "v": mk((ns, b, s, kvh, hd))}
+    return cache
+
+
+def cache_logical_axes(cfg, cache):
+    """Logical axes for the cache pytree (for dry-run shardings)."""
+    ax = {
+        "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "shift1": ("layers", "batch", None, "embed"),
+        "shift2": ("layers", "batch", None, "embed"),
+        "wkv": ("layers", "batch", "rwkv_heads", None, None),
+        "conv": ("layers", "batch", "conv", "mamba_inner"),
+        "ssm": ("layers", "batch", "mamba_heads", None, "state"),
+    }
+    return jax.tree.map_with_path(
+        lambda path, leaf: ax[path[-1].key if hasattr(path[-1], "key") else
+                              path[-1]], cache)
+
+
+def _scan_or_unroll(body, init, xs, n: int, scan: bool):
+    """lax.scan or a python-unrolled equivalent (the dry-run cost calibration
+    needs unrolled bodies: XLA cost analysis counts while bodies once).
+
+    In the unrolled path, leaves that are the layer-index iota (detected as
+    1-D int arrays equal to arange(n)) are replaced by the *python* index so
+    bodies can resolve layer-pattern branches statically."""
+    if scan:
+        return jax.lax.scan(body, init, xs)
+    import numpy as _np
+    iota = _np.arange(n)
+
+    def slice_leaf(a, i):
+        # numpy layer-index iota -> python int (static branch resolution)
+        if isinstance(a, _np.ndarray) and a.ndim == 1 and \
+                a.dtype.kind == "i" and a.shape[0] == n and \
+                bool((a == iota).all()):
+            return i
+        return a[i]
+
+    carry = init
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: slice_leaf(a, i), xs))
+        ys.append(y)
+    stacked = (jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+               if ys and ys[0] is not None else None)
+    return carry, stacked
+
+
+def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
+                scan_layers: bool = True):
+    """One-token decode.  tokens: (B, 1).  Returns (logits, new_cache)."""
+    del img_embeds  # image tokens only participate via the prefill cache
+    dtype = jnp.dtype(cfg.dtype)
+    h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dtype)
+    h = constrain(h, ("batch", None, "embed"))
+    emb0 = h if cfg.family == "hybrid" and cfg.hybrid_attn_every else None
+    every = cfg.hybrid_attn_every
+    fam = cfg.family
+
+    def body(carry, xs):
+        lp, layer_cache, idx = xs
+        if fam == "hybrid" and every:
+            h, shared_kv = carry
+        else:
+            h = carry
+
+        if fam in ("dense", "vlm", "moe"):
+            a_in = apply_norm(lp["ln1"], h, cfg)
+            a, nk, nv = attn.attention_decode_block(
+                lp["attn"], cfg, a_in, layer_cache["k"], layer_cache["v"],
+                cache_index)
+            h = h + a
+            f_in = apply_norm(lp["ln2"], h, cfg)
+            if "moe" in lp:
+                f, _ = moe_mod.moe_ffn_decode(lp["moe"], cfg, f_in)
+            else:
+                f = mlp_mod.mlp(lp["mlp"], cfg, f_in)
+            h = h + f
+            new_cache = {"k": nk, "v": nv}
+        elif fam == "ssm":
+            x = apply_norm(lp["ln1"], h, cfg)
+            y, (s1, wkv) = rwkv6.tmix_block(lp["tmix"], cfg, x,
+                                            shift_state=layer_cache["shift1"],
+                                            wkv_state=layer_cache["wkv"],
+                                            decode=True)
+            h = h + y
+            x2 = apply_norm(lp["ln2"], h, cfg)
+            y2, s2 = rwkv6.cmix_block(lp["cmix"], cfg, x2,
+                                      shift_state=layer_cache["shift2"])
+            h = h + y2
+            new_cache = {"shift1": s1, "wkv": wkv, "shift2": s2}
+        elif fam == "hybrid":
+            x = apply_norm(lp["ln1"], h, cfg)
+            y, (cst, sst) = mamba2.mamba_block(lp["mamba"], cfg, x,
+                                               conv_state=layer_cache["conv"],
+                                               ssm_state=layer_cache["ssm"],
+                                               decode=True)
+            h = h + y
+
+            def fire(args):
+                h, skv = args
+                inv = idx // every
+                dtype = h.dtype
+                u = jnp.concatenate([h, emb0], axis=-1)
+                sp = params["shared"]
+                u = jnp.einsum("bsd,de->bse", u,
+                               sp["in_proj"]["kernel"].astype(dtype))
+                a_in = apply_norm(sp["ln1"], u, cfg)
+                a, nk, nv = attn.attention_decode_block(
+                    sp["attn"], cfg, a_in, skv["k"][inv], skv["v"][inv],
+                    cache_index)
+                u = u + a
+                u = u + mlp_mod.mlp(sp["mlp"], cfg,
+                                    apply_norm(sp["ln2"], u, cfg))
+                skv = {"k": jax.lax.dynamic_update_index_in_dim(
+                           skv["k"], nk, inv, 0),
+                       "v": jax.lax.dynamic_update_index_in_dim(
+                           skv["v"], nv, inv, 0)}
+                return h + u, skv
+
+            if isinstance(idx, int):
+                # unrolled: static branch avoids lax.cond's both-branch copy
+                # of the whole shared cache per layer (§Perf zamba decode)
+                if (idx % every) == every - 1:
+                    h, shared_kv = fire((h, shared_kv))
+            else:
+                h, shared_kv = jax.lax.cond((idx % every) == every - 1,
+                                            fire, lambda a: a, (h, shared_kv))
+            new_cache = {"conv": cst, "ssm": sst}
+        else:
+            raise ValueError(fam)
+
+        if fam == "hybrid" and every:
+            return (h, shared_kv), new_cache
+        return h, new_cache
+
+    import numpy as _np
+    idxs = _np.arange(cfg.num_layers)   # numpy: stays concrete under jit
+    if fam == "hybrid" and every:
+        init = (h, cache["shared"])
+        (h, shared_kv), new_layers = _scan_or_unroll(
+            body, init, (params["layers"], cache["layers"], idxs),
+            cfg.num_layers, scan_layers)
+        new_cache = {"layers": new_layers, "shared": shared_kv}
+    else:
+        h, new_layers = _scan_or_unroll(
+            body, h, (params["layers"], cache["layers"], idxs),
+            cfg.num_layers, scan_layers)
+        new_cache = {"layers": new_layers}
+
+    logits = unembed(params, cfg, h)
+    return logits, new_cache

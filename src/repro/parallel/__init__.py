@@ -1,0 +1,8 @@
+from repro.parallel.mesh import make_production_mesh, make_mesh
+from repro.parallel.sharding import (Rules, constrain, default_rules,
+                                     logical_to_sharding, sharding_context,
+                                     spec_for)
+
+__all__ = ["make_production_mesh", "make_mesh", "Rules", "constrain",
+           "default_rules", "logical_to_sharding", "sharding_context",
+           "spec_for"]

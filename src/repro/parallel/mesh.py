@@ -1,0 +1,39 @@
+"""Mesh construction.  Functions only — importing this module never touches
+jax device state (required so smoke tests see 1 device while the dry-run
+sees 512 placeholder devices)."""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh: one 256-chip pod (16×16) or two pods (2×16×16).
+
+    ``pod`` is the slow (DCN / inter-pod) axis; ``data`` and ``model`` are ICI.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    assert len(shape) == len(axes)
+    n = int(np.prod(shape))
+    if n > len(jax.devices()):
+        raise RuntimeError(
+            f"mesh {tuple(shape)} needs {n} devices, have {len(jax.devices())}; "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before any jax import")
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def mesh_axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Axes that carry data parallelism (pod is an outer DP axis by default)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

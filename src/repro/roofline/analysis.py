@@ -1,0 +1,96 @@
+"""Three-term roofline from compiled dry-run artifacts (TPU v5e targets).
+
+  compute    = HLO_FLOPs_per_device / 197e12          [s]
+  memory     = HLO_bytes_per_device / 819e9           [s]
+  collective = collective_bytes_per_device / 50e9     [s]  (single ICI link,
+               conservative; v5e has 4 links — reported as-is, see DESIGN.md)
+
+plus MODEL_FLOPS = 6·N_active·tokens (train) / 2·N_active·tokens (fwd) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_LINK_BW = 50e9        # bytes/s per link
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # per device
+    hlo_bytes: float            # per device
+    collective_bytes: float     # per device
+    model_flops_global: float
+    tokens_per_step: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        per_dev_model = self.model_flops_global / max(self.chips, 1)
+        return per_dev_model / max(self.hlo_flops, 1.0)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline bound (the score metric):
+        model_flops / (chips × peak × bound_time)."""
+        per_dev_model = self.model_flops_global / max(self.chips, 1)
+        return per_dev_model / (PEAK_FLOPS * max(self.bound_s, 1e-30))
+
+    def to_dict(self) -> Dict:
+        d = asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, dominant=self.dominant,
+                 useful_ratio=self.useful_ratio, mfu_bound=self.mfu_bound)
+        return d
+
+
+def from_record(rec: Dict) -> Roofline:
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        chips=rec["chips"],
+        hlo_flops=rec.get("cost_analysis", {}).get("flops", 0.0),
+        hlo_bytes=rec.get("cost_analysis", {}).get("bytes accessed", 0.0),
+        collective_bytes=rec.get("collectives", {}).get("total_bytes", 0.0),
+        model_flops_global=rec.get("model_flops_global", 0.0),
+        tokens_per_step=rec.get("tokens_per_step", 0),
+    )
+
+
+def table_row(r: Roofline) -> str:
+    return (f"| {r.arch} | {r.shape} | {r.mesh} | "
+            f"{r.compute_s*1e3:.2f} | {r.memory_s*1e3:.2f} | "
+            f"{r.collective_s*1e3:.2f} | {r.dominant} | "
+            f"{r.useful_ratio:.2f} | {r.mfu_bound*100:.1f}% |")
+
+
+TABLE_HEADER = ("| arch | shape | mesh | compute ms | memory ms | "
+                "collective ms | bottleneck | useful | MFU@bound |\n"
+                "|---|---|---|---|---|---|---|---|---|")

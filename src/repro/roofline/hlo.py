@@ -1,0 +1,100 @@
+"""Post-optimization HLO parsing: per-device collective bytes.
+
+The SPMD-partitioned module's shapes are per-device, so summing operand/result
+sizes of collective ops gives *per-device* bytes-on-the-wire, which divided by
+per-chip link bandwidth is the collective roofline term (equivalent to the
+global-bytes / (chips × link_bw) formulation).
+
+Byte accounting per op (ring algorithms):
+  all-reduce      2 × size   (reduce-scatter + all-gather phases)
+  all-gather      result size (each device receives ~the full result)
+  reduce-scatter  operand size (each device sends ~its full operand)
+  all-to-all      size       (each device sends all but its own slice)
+  collective-permute  size
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+# v2 iota format: replica_groups=[num_groups,group_size]<=[total]
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict]:
+    """Scan optimized HLO; returns per-op-kind {count, bytes} + total.
+
+    ``-done`` ops (async pairs) are skipped so each collective counts once.
+    """
+    stats = defaultdict(lambda: {"count": 0, "bytes": 0})
+    ops: List[Tuple[str, int, int]] = []
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "-done.1" in line:
+            # async completion op: shape already counted at -start
+            if any(c in line for c in _COLLECTIVES):
+                continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_txt, kind = m.group(1), m.group(2)
+        result_bytes = _shape_bytes(result_txt)
+        operand_bytes = _shape_bytes(line[m.end():])
+        if kind == "all-reduce":
+            b = 2 * result_bytes
+        elif kind == "all-gather":
+            b = result_bytes
+        elif kind == "reduce-scatter":
+            b = operand_bytes
+        else:  # all-to-all, collective-permute
+            b = max(result_bytes, operand_bytes if kind == "all-to-all" else 0)
+        g = _GROUPS_RE.search(line)
+        if g:
+            group_size = len(g.group(1).split(","))
+        else:
+            g2 = _GROUPS_V2_RE.search(line)
+            group_size = int(g2.group(2)) if g2 else 0
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += b
+        ops.append((kind, b, group_size))
+    total = sum(v["bytes"] for v in stats.values())
+    return {"per_kind": dict(stats), "total_bytes": int(total),
+            "largest_ops": sorted(ops, key=lambda t: -t[1])[:12]}
+
+
+def count_op_flavors(hlo_text: str) -> Dict[str, int]:
+    """Cheap structural profile: fusion/convert/transpose/etc. op counts (used
+    to spot layout thrash and remat-duplicated compute)."""
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z][\w-]*)\(", line)
+        if m:
+            counts[m.group(1)] += 1
+    return dict(counts)

@@ -1,0 +1,104 @@
+"""Builds the EXPERIMENTS.md §Dry-run / §Roofline tables from the sweep
+records in experiments/dryrun/."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.roofline.analysis import (TABLE_HEADER, Roofline, from_record,
+                                     table_row)
+
+DRYRUN = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_records(mesh: str = "pod16x16", tag: str = "") -> List[Dict]:
+    out = []
+    for p in sorted((DRYRUN / mesh).glob("*.json")):
+        r = json.loads(p.read_text())
+        if tag and r.get("tag") != tag:
+            continue
+        if not tag and r.get("tag", "baseline") != "baseline":
+            continue
+        out.append(r)
+    return out
+
+
+def load_cell(arch: str, shape: str, mesh: str = "pod16x16",
+              tag: str = "baseline") -> Optional[Dict]:
+    suffix = "" if tag == "baseline" else f"__{tag}"
+    p = DRYRUN / mesh / f"{arch}__{shape}{suffix}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def _key(r):
+    return (r["arch"], SHAPE_ORDER.index(r["shape"])
+            if r["shape"] in SHAPE_ORDER else 99)
+
+
+def roofline_table(mesh: str = "pod16x16") -> str:
+    lines = [TABLE_HEADER]
+    skips = []
+    for r in sorted(load_records(mesh), key=_key):
+        if r.get("skipped"):
+            skips.append(f"- `{r['arch']} × {r['shape']}`: {r['skipped']}")
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | "
+                         f"FAILED: {r.get('error','?')} | | | | | |")
+            continue
+        lines.append(table_row(from_record(r)))
+    out = "\n".join(lines)
+    if skips:
+        out += "\n\nSkipped cells (DESIGN.md §4):\n" + "\n".join(skips)
+    return out
+
+
+def dryrun_table() -> str:
+    """§Dry-run: per-cell compile proof + memory analysis on both meshes."""
+    lines = ["| arch | shape | mesh | compile s | args GB/dev | temp GB/dev "
+             "| collective kinds |",
+             "|---|---|---|---|---|---|---|"]
+    for mesh in ("pod16x16", "pod2x16x16"):
+        for r in sorted(load_records(mesh), key=_key):
+            if r.get("skipped"):
+                continue
+            if not r.get("ok"):
+                lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | FAIL |"
+                             f" | | {r.get('error','?')} |")
+                continue
+            ma = r.get("memory_analysis", {})
+            kinds = sorted(r.get("scan_counted", r).get(
+                "collectives", {}).get("per_kind", {}))
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} "
+                f"| {r.get('compile_s','-')} "
+                f"| {ma.get('argument_size_in_bytes', 0)/1e9:.1f} "
+                f"| {ma.get('temp_size_in_bytes', 0)/1e9:.1f} "
+                f"| {','.join(kinds)} |")
+    return "\n".join(lines)
+
+
+def summary_stats(mesh: str = "pod16x16") -> Dict:
+    recs = [r for r in load_records(mesh) if r.get("ok")]
+    rf = [from_record(r) for r in recs]
+    return {
+        "cells_ok": len(recs),
+        "bottlenecks": {b: sum(1 for r in rf if r.dominant == b)
+                        for b in ("compute", "memory", "collective")},
+        "worst_mfu": min(rf, key=lambda r: r.mfu_bound).arch if rf else None,
+        "most_collective": max(rf, key=lambda r: r.collective_s).arch
+        if rf else None,
+    }
+
+
+if __name__ == "__main__":
+    print("## Single-pod roofline (16x16 = 256 chips)\n")
+    print(roofline_table("pod16x16"))
+    print("\n\n## Dry-run compile matrix\n")
+    print(dryrun_table())
+    print("\n", json.dumps(summary_stats(), indent=1))

@@ -1,0 +1,4 @@
+from repro.serve.engine import Request, SamplingParams, ServeEngine, \
+    sample_token
+
+__all__ = ["Request", "SamplingParams", "ServeEngine", "sample_token"]

@@ -1,0 +1,8 @@
+from repro.train.optimizer import (adamw_update, init_opt_state, lr_schedule)
+from repro.train.trainer import (abstract_train_state, init_train_state,
+                                 make_eval_step, make_train_step,
+                                 train_state_logical_axes)
+
+__all__ = ["adamw_update", "init_opt_state", "lr_schedule",
+           "abstract_train_state", "init_train_state", "make_eval_step",
+           "make_train_step", "train_state_logical_axes"]

@@ -1,0 +1,95 @@
+"""AdamW with mixed-precision master weights + LR schedules (no optax dep).
+
+Optimizer state is a pytree congruent with params, so the FSDP sharding rules
+apply verbatim (ZeRO: master/m/v sharded exactly like the weights).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def lr_schedule(tcfg: TrainConfig, step):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    total = max(tcfg.total_steps - tcfg.warmup_steps, 1)
+    frac = jnp.clip((step - tcfg.warmup_steps) / total, 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    mult = tcfg.min_lr_ratio + (1 - tcfg.min_lr_ratio) * cos
+    return tcfg.learning_rate * warm * mult
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros_like_f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(zeros_like_f32, params),
+        "v": jax.tree.map(zeros_like_f32, params),
+    }
+    if any(p.dtype != jnp.float32 for p in jax.tree.leaves(params)):
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def abstract_opt_state(abstract_parms) -> Dict[str, Any]:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    state = {"m": jax.tree.map(f32, abstract_parms),
+             "v": jax.tree.map(f32, abstract_parms)}
+    if any(p.dtype != jnp.float32 for p in jax.tree.leaves(abstract_parms)):
+        state["master"] = jax.tree.map(f32, abstract_parms)
+    return state
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt_state, params, step, tcfg: TrainConfig):
+    """Returns (new_params, new_opt_state, stats).  grads may be bf16; moments
+    and master weights are f32."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tcfg.grad_clip / (gnorm + 1e-9)) \
+        if tcfg.grad_clip > 0 else 1.0
+    lr = lr_schedule(tcfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - tcfg.beta1 ** t
+    bc2 = 1.0 - tcfg.beta2 ** t
+    masters = opt_state.get("master", params)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = tcfg.beta1 * m + (1 - tcfg.beta1) * g
+        v = tcfg.beta2 * v + (1 - tcfg.beta2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        step_ = mhat / (jnp.sqrt(vhat) + tcfg.eps)
+        if master.ndim >= 2 and tcfg.weight_decay > 0:
+            step_ = step_ + tcfg.weight_decay * master
+        new_master = master - lr * step_
+        return m, v, new_master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_ma = treedef.flatten_up_to(masters)
+    out = [upd(g, m, v, ma) for g, m, v, ma in
+           zip(flat_g, flat_m, flat_v, flat_ma)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+
+    flat_p = treedef.flatten_up_to(params)
+    new_params = treedef.unflatten(
+        [ma.astype(p.dtype) for ma, p in
+         zip([o[2] for o in out], flat_p)])
+    new_state = {"m": new_m, "v": new_v}
+    if "master" in opt_state:
+        new_state["master"] = new_master
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, stats

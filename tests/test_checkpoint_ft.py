@@ -1,0 +1,127 @@
+"""Checkpointing + fault-tolerant runtime: roundtrip, corruption detection,
+crash-consistency, Young policy, loss-trajectory equivalence under injected
+failures, and the <10% lost-time simulation (paper §2.3.3)."""
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS, TrainConfig
+from repro.core import (CheckpointManager, FTTrainLoop, MetricsRegistry,
+                        latest_step, load_checkpoint, save_checkpoint,
+                        simulate_job)
+from repro.core.runtime import job_mtbf_seconds
+from repro.models import LM, ForwardOpts, make_batch
+from repro.train import init_train_state, make_train_step
+
+OPTS = ForwardOpts(attn_impl="dense", remat="none")
+
+
+def _tiny_setup(tmp_path, name="qwen3-4b"):
+    cfg = dataclasses.replace(CONFIGS[name].reduced(), dtype="float32",
+                              num_layers=2)
+    lm = LM(cfg)
+    tcfg = TrainConfig(learning_rate=5e-3, warmup_steps=2, total_steps=40)
+    state = init_train_state(lm, jax.random.key(0), tcfg)
+    step = jax.jit(make_train_step(lm, tcfg, OPTS))
+    return cfg, lm, state, step
+
+
+def test_checkpoint_roundtrip_and_latest(tmp_path):
+    cfg, lm, state, step = _tiny_setup(tmp_path)
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, state, 7)
+    save_checkpoint(d, state, 14)
+    assert latest_step(d) == 14
+    restored, s = load_checkpoint(d, template=state)
+    assert s == 14
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    cfg, lm, state, step = _tiny_setup(tmp_path)
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, state, 1)
+    shard = next(Path(d, "step_00000001").glob("shard_*.npz"))
+    data = bytearray(shard.read_bytes())
+    data[100] ^= 0xFF
+    shard.write_bytes(bytes(data))
+    with pytest.raises(IOError, match="corruption"):
+        load_checkpoint(d, template=state)
+
+
+def test_checkpoint_gc_keeps_last_k(tmp_path):
+    cfg, lm, state, step = _tiny_setup(tmp_path)
+    d = str(tmp_path / "ckpt")
+    for s in range(1, 7):
+        save_checkpoint(d, state, s, keep_last=3)
+    dirs = sorted(p.name for p in Path(d).glob("step_*"))
+    assert dirs == ["step_00000004", "step_00000005", "step_00000006"]
+
+
+def test_ft_loop_failure_equivalence(tmp_path):
+    """Loss trajectory with injected crashes must equal the failure-free run
+    (same deterministic data order, restart from checkpoint)."""
+    cfg, lm, state, step = _tiny_setup(tmp_path)
+    batches = {i: make_batch(cfg, 2, 32, rng=i) for i in range(12)}
+    get_batch = lambda i: batches[i]
+
+    clean = FTTrainLoop(step, state, str(tmp_path / "a"), ckpt_every=3)
+    clean.run(get_batch, 12)
+    faulty = FTTrainLoop(step, state, str(tmp_path / "b"), ckpt_every=3)
+    faulty.run(get_batch, 12, fail_at=lambda s: s in (5, 10))
+    assert faulty.restarts == 2
+
+    clean_by_step = {m["step"]: m["loss"] for m in clean.metrics_log}
+    fault_by_step = {m["step"]: m["loss"] for m in faulty.metrics_log}
+    for s in range(12):
+        assert fault_by_step[s] == pytest.approx(clean_by_step[s], rel=1e-5)
+
+
+def test_ft_loop_resume_after_process_restart(tmp_path):
+    cfg, lm, state, step = _tiny_setup(tmp_path)
+    get_batch = lambda i: make_batch(cfg, 2, 32, rng=i)
+    d = str(tmp_path / "c")
+    loop1 = FTTrainLoop(step, state, d, ckpt_every=4)
+    loop1.run(get_batch, 8)
+    # simulates a new process resuming the same job
+    loop2 = FTTrainLoop(step, state, d, ckpt_every=4)
+    final = loop2.run(get_batch, 12)
+    assert int(final["step"]) == 12
+    assert loop2.metrics_log[0]["step"] == 8
+
+
+def test_young_interval_used_by_manager(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), delta_seconds=90.0,
+                            mtbf_seconds=job_mtbf_seconds(96),
+                            step_time=5.0)
+    # sqrt(2*90*M)/5 steps; M = 1/(0.04/month*96) ~ 8.1 days
+    assert 1000 < mgr.every < 15000
+    assert not mgr.should_save(mgr.every - 1)
+    assert mgr.should_save(mgr.every)
+
+
+def test_simulation_lost_time_under_10_percent():
+    """The paper's headline: <10% of time lost to failures, Young interval."""
+    for seed in (0, 1):
+        rep = simulate_job(n_cluster_nodes=110, job_nodes=96,
+                           total_steps=60_000, base_step_time=5.0, seed=seed)
+        assert rep.lost_fraction < 0.10, rep.summary()
+        assert rep.useful_s > 0
+
+
+def test_simulation_with_aggressive_failures_still_bounded():
+    from repro.core.cluster import DEFAULT_RATES
+    rates = {k: 5 * v for k, v in DEFAULT_RATES.items()}  # 10%/mo crashes
+    rep = simulate_job(n_cluster_nodes=120, job_nodes=96,
+                       total_steps=40_000, base_step_time=5.0, seed=2,
+                       rates=rates)
+    # worst-case month in the paper is 5%: we stress 2x beyond and require
+    # bounded degradation rather than the clean <10%
+    assert rep.lost_fraction < 0.25, rep.summary()
+    assert rep.restarts >= 1 or rep.node_swaps >= 1

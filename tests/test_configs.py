@@ -1,0 +1,109 @@
+"""Config registry: every assigned arch present with the exact published
+dims; derived quantities consistent."""
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, CONFIGS, SHAPES, applicable,
+                           get_config, get_shape)
+
+EXPECTED = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+    "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+    "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+    "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+    "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+    "rwkv6-1.6b": (24, 2048, 0, 0, 7168, 65536),
+    "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+}
+
+PARAM_BILLIONS = {
+    "arctic-480b": (430, 520), "moonshot-v1-16b-a3b": (20, 32),
+    "zamba2-1.2b": (1.0, 1.5), "llama3.2-3b": (2.8, 3.6),
+    "starcoder2-3b": (2.7, 3.6), "llama3-405b": (390, 420),
+    "qwen3-4b": (3.6, 4.4), "rwkv6-1.6b": (1.3, 1.8),
+    "seamless-m4t-large-v2": (1.2, 2.4), "internvl2-2b": (1.6, 2.3),
+}
+
+
+def test_all_assigned_archs_present():
+    assert set(EXPECTED) == set(ASSIGNED_ARCHS)
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_exact_dims(name):
+    c = get_config(name)
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == EXPECTED[name]
+
+
+@pytest.mark.parametrize("name", sorted(PARAM_BILLIONS))
+def test_param_counts_in_range(name):
+    c = get_config(name)
+    lo, hi = PARAM_BILLIONS[name]
+    n = c.param_count() / 1e9
+    assert lo <= n <= hi, f"{name}: {n:.2f}B not in [{lo},{hi}]"
+
+
+def test_moe_active_params_less_than_total():
+    for name in ("arctic-480b", "moonshot-v1-16b-a3b"):
+        c = get_config(name)
+        assert c.active_param_count() < 0.2 * c.param_count()
+
+
+def test_param_count_matches_spec_tree():
+    """Analytic count == actual initializer tree (exactness contract)."""
+    from repro.models import LM
+    import numpy as np
+    import jax
+    for name in ("qwen3-4b", "rwkv6-1.6b", "zamba2-1.2b",
+                 "seamless-m4t-large-v2", "moonshot-v1-16b-a3b"):
+        c = get_config(name).reduced()
+        spec = LM(c).spec()
+        actual = sum(int(np.prod(p.shape))
+                     for p in jax.tree.leaves(
+                         spec, is_leaf=lambda x: hasattr(x, "shape")))
+        analytic = c.param_count()
+        # vocab padding and lora dims make the analytic formula approximate
+        assert abs(actual - analytic) / actual < 0.25, \
+            (name, actual, analytic)
+
+
+def test_padded_vocab_multiple_of_128():
+    for c in CONFIGS.values():
+        assert c.padded_vocab % 128 == 0
+        assert c.padded_vocab >= c.vocab_size
+
+
+def test_dff_divides_model_axis():
+    for c in CONFIGS.values():
+        assert c.d_ff % 16 == 0
+
+
+def test_shape_applicability():
+    long = get_shape("long_500k")
+    runs = [n for n, c in ASSIGNED_ARCHS.items() if applicable(c, long)]
+    assert sorted(runs) == ["rwkv6-1.6b", "zamba2-1.2b"]
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        for c in ASSIGNED_ARCHS.values():
+            assert applicable(c, get_shape(s))
+
+
+def test_shapes_exact():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_flops_per_token_orders():
+    c = get_config("llama3-405b")
+    t = c.flops_per_token(4096, "train")
+    assert 2.4e12 < t < 3.5e12          # ~6N + attention
+    d = c.flops_per_token(32768, "decode")
+    assert d < t

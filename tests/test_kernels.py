@@ -1,0 +1,143 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (deliverable c):
+shapes × dtypes, interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,kv,g,d,bq,bk", [
+    (1, 128, 1, 1, 64, 64, 64),
+    (2, 256, 2, 3, 64, 128, 64),
+    (1, 128, 4, 2, 128, 32, 128),
+    (2, 64, 1, 8, 32, 64, 32),
+])
+def test_flash_attention_sweep(b, s, kv, g, d, bq, bk, dtype):
+    q = jnp.asarray(RNG.normal(0, 1, (b, s, kv, g, d)), dtype)
+    k = jnp.asarray(RNG.normal(0, 1, (b, s, kv, d)), dtype)
+    v = jnp.asarray(RNG.normal(0, 1, (b, s, kv, d)), dtype)
+    o = ops.flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    q2 = q.transpose(0, 2, 3, 1, 4).reshape(b * kv * g, s, d)
+    k2 = k.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    v2 = v.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    exp = ref.flash_attention_ref(q2, k2, v2, causal=True)
+    exp = exp.reshape(b, kv, g, s, d).transpose(0, 3, 1, 2, 4)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_non_causal():
+    b, s, kv, g, d = 1, 128, 2, 2, 64
+    q = jnp.asarray(RNG.normal(0, 1, (b, s, kv, g, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, s, kv, d)), jnp.float32)
+    o = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    q2 = q.transpose(0, 2, 3, 1, 4).reshape(b * kv * g, s, d)
+    k2 = k.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    v2 = v.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    exp = ref.flash_attention_ref(q2, k2, v2, causal=False)
+    exp = exp.reshape(b, kv, g, s, d).transpose(0, 3, 1, 2, 4)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(exp), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d,br", [(128, 64, 64), (384, 256, 128),
+                                    (64, 1024, 32)])
+def test_rmsnorm_sweep(n, d, br, dtype):
+    x = jnp.asarray(RNG.normal(0, 2, (n, d)), dtype)
+    sc = jnp.asarray(RNG.normal(1, 0.2, (d,)), jnp.float32)
+    o = ops.rmsnorm(x, sc, block_rows=br)
+    exp = ref.rmsnorm_ref(x, sc)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 64, 1, 16, 8, 16),
+    (2, 128, 3, 32, 16, 32),
+    (1, 256, 2, 64, 64, 64),
+])
+def test_mamba2_ssd_sweep(b, s, h, p, n, chunk, dtype):
+    x = jnp.asarray(RNG.normal(0, 0.5, (b, s, h, p)), dtype)
+    da = -jnp.asarray(RNG.uniform(0.001, 0.3, (b, s, h)), jnp.float32)
+    bm = jnp.asarray(RNG.normal(0, 0.5, (b, s, n)), dtype)
+    cm = jnp.asarray(RNG.normal(0, 0.5, (b, s, n)), dtype)
+    o = ops.mamba2_ssd(x, da, bm, cm, chunk=chunk)
+    x2 = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    da2 = da.transpose(0, 2, 1).reshape(b * h, s)
+    exp = ref.ssd_ref(x2, da2, bm, cm).reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,k,chunk", [
+    (1, 64, 1, 16, 16),
+    (2, 128, 3, 32, 32),
+    (1, 96, 2, 64, 32),
+])
+def test_rwkv6_wkv_sweep(b, s, h, k, chunk, dtype):
+    r = jnp.asarray(RNG.normal(0, 0.5, (b, s, h, k)), dtype)
+    kk = jnp.asarray(RNG.normal(0, 0.5, (b, s, h, k)), dtype)
+    vv = jnp.asarray(RNG.normal(0, 0.5, (b, s, h, k)), dtype)
+    lw = jnp.maximum(
+        -jnp.asarray(RNG.uniform(0.001, 1.5, (b, s, h, k)), jnp.float32),
+        -2.5)
+    u = jnp.asarray(RNG.normal(0, 0.3, (h, k)), jnp.float32)
+    o = ops.rwkv6_wkv(r, kk, vv, lw, u, chunk=chunk)
+
+    def fold(t):
+        return t.transpose(0, 2, 1, 3).reshape(b * h, s, -1)
+    exp = ref.wkv6_ref(fold(r), fold(kk), fold(vv), fold(lw), u)
+    exp = exp.reshape(b, h, s, k).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_chunked_model_forms_match_naive_recurrence():
+    """The models' chunked-parallel SSD/WKV (the XLA path, not just the
+    kernels) must equal the naive scan oracle."""
+    from repro.models.mamba2 import ssd_chunked
+    from repro.models.rwkv6 import wkv6_chunked
+    b, s, h, p, n = 2, 96, 2, 16, 8
+    x = jnp.asarray(RNG.normal(0, 0.5, (b, s, h, p)), jnp.float32)
+    da = -jnp.asarray(RNG.uniform(0.001, 0.3, (b, s, h)), jnp.float32)
+    bm = jnp.asarray(RNG.normal(0, 0.5, (b, s, n)), jnp.float32)
+    cm = jnp.asarray(RNG.normal(0, 0.5, (b, s, n)), jnp.float32)
+    y = ssd_chunked(x, da, bm, cm, chunk=32)
+    x2 = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    da2 = da.transpose(0, 2, 1).reshape(b * h, s)
+    exp = ref.ssd_ref(x2, da2, bm, cm).reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(exp), rtol=2e-5,
+                               atol=2e-5)
+
+    k = 16
+    r = jnp.asarray(RNG.normal(0, 0.5, (b, s, h, k)), jnp.float32)
+    kk = jnp.asarray(RNG.normal(0, 0.5, (b, s, h, k)), jnp.float32)
+    vv = jnp.asarray(RNG.normal(0, 0.5, (b, s, h, k)), jnp.float32)
+    lw = jnp.maximum(
+        -jnp.asarray(RNG.uniform(0.001, 1.5, (b, s, h, k)), jnp.float32),
+        -2.5)
+    u = jnp.asarray(RNG.normal(0, 0.3, (h, k)), jnp.float32)
+    y = wkv6_chunked(r, kk, vv, lw, u, chunk=16)
+    if isinstance(y, tuple):
+        y = y[0]
+
+    def fold(t):
+        return t.transpose(0, 2, 1, 3).reshape(b * h, s, -1)
+    exp = ref.wkv6_ref(fold(r), fold(kk), fold(vv), fold(lw), u)
+    exp = exp.reshape(b, h, s, k).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(exp), rtol=2e-5,
+                               atol=2e-5)

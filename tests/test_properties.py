@@ -1,0 +1,116 @@
+"""Hypothesis property-based tests on system invariants."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.youngs import (lost_fraction, optimal_lost_fraction,
+                               young_interval)
+from repro.parallel.compression import dequantize, quantize_int8
+
+
+# ----------------------------------------------------------------- Young ----
+
+@given(delta=st.floats(1.0, 1e4), mtbf=st.floats(60.0, 1e8))
+@settings(max_examples=200, deadline=None)
+def test_young_interval_is_optimal(delta, mtbf):
+    """The Young interval minimizes first-order lost fraction."""
+    tau = young_interval(delta, mtbf)
+    best = lost_fraction(delta, mtbf, tau)
+    for mult in (0.5, 0.8, 1.25, 2.0):
+        assert best <= lost_fraction(delta, mtbf, tau * mult) + 1e-12
+
+
+@given(delta=st.floats(1.0, 1e3), mtbf=st.floats(1e4, 1e8))
+@settings(max_examples=100, deadline=None)
+def test_young_closed_form(delta, mtbf):
+    assert math.isclose(optimal_lost_fraction(delta, mtbf),
+                        math.sqrt(2 * delta / mtbf), rel_tol=1e-9)
+    assert math.isclose(young_interval(delta, mtbf),
+                        math.sqrt(2 * delta * mtbf), rel_tol=1e-12)
+
+
+# -------------------------------------------------------------- sharding ----
+
+mesh_axes_st = st.sampled_from([("data", "model"), ("pod", "data", "model")])
+
+
+@given(
+    mesh_axes=mesh_axes_st,
+    dims=st.lists(st.sampled_from([1, 2, 3, 5, 8, 16, 24, 56, 128, 4096]),
+                  min_size=1, max_size=4),
+    names=st.lists(st.sampled_from(["batch", "embed", "heads", "kv_heads",
+                                    "mlp", "vocab", "expert", None]),
+                   min_size=1, max_size=4),
+)
+@settings(max_examples=300, deadline=None)
+def test_spec_for_invariants(mesh_axes, dims, names):
+    """Resolved PartitionSpecs never repeat a mesh axis and always divide the
+    dimension they shard."""
+    import jax
+    from repro.parallel.sharding import default_rules, spec_for
+    n = min(len(dims), len(names))
+    dims, names = dims[:n], names[:n]
+    devices = np.array(jax.devices() * 512)[:512]
+    shape = ((2, 16, 16) if len(mesh_axes) == 3 else (16, 16))
+    mesh = jax.sharding.Mesh(devices[:np.prod(shape)].reshape(shape),
+                             mesh_axes)
+    rules = default_rules(mesh_axes)
+    spec = spec_for(names, dims, rules, mesh)
+    used = []
+    for dim, entry in zip(dims, tuple(spec) + (None,) * (n - len(spec))):
+        axes = (entry,) if isinstance(entry, str) else (entry or ())
+        extent = 1
+        for a in axes:
+            assert a not in used
+            used.append(a)
+            extent *= mesh.shape[a]
+        assert dim % extent == 0
+
+
+# ------------------------------------------------------------ compression ----
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_int8_quantization_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, rng.uniform(0.1, 10), 256), jnp.float32)
+    q, scale, err = quantize_int8(x)
+    rec = dequantize(q, scale)
+    # max error bounded by half a quantization bucket
+    assert float(jnp.max(jnp.abs(x - rec))) <= float(scale) * 0.5 + 1e-6
+    # error feedback exactness: x == rec + err
+    np.testing.assert_allclose(np.asarray(rec + err), np.asarray(x),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(0, 200))
+@settings(max_examples=30, deadline=None)
+def test_error_feedback_reduces_bias(seed):
+    """Accumulated error feedback makes the time-average unbiased."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(0, 1, 64), jnp.float32)
+    err = jnp.zeros(64, jnp.float32)
+    total = jnp.zeros(64, jnp.float32)
+    steps = 32
+    for _ in range(steps):
+        q, scale, err = quantize_int8(g, err)
+        total = total + dequantize(q, scale)
+    np.testing.assert_allclose(np.asarray(total / steps), np.asarray(g),
+                               atol=float(scale) / steps + 1e-4)
+
+
+# ---------------------------------------------------------------- storage ----
+
+@given(cap=st.integers(2, 20), n=st.integers(1, 40))
+@settings(max_examples=50, deadline=None)
+def test_lru_never_exceeds_capacity_with_clean_entries(cap, n):
+    from repro.core import COS, BlobStore, ScaleCache, VirtualClock
+    clock = VirtualClock()
+    cos = BlobStore(COS, clock)
+    cache = ScaleCache(cos, clock, capacity_bytes=float(cap))
+    for i in range(n):
+        cos.blobs[f"b{i}"] = 1
+        cache.read(f"b{i}")
+    assert cache.used <= cap
