@@ -1,0 +1,19 @@
+# Developer entry points.  `make smoke` is the CI gate: the tier-1 test
+# suite plus an import-check of the benchmark harness, so dependency drift
+# (e.g. an unguarded optional import) can't silently break collection again.
+
+PY ?= python
+
+.PHONY: test smoke bench dev-deps
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+smoke: test
+	PYTHONPATH=src:. $(PY) -c "import benchmarks.run; print('benchmarks: import ok')"
+
+bench:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py
+
+dev-deps:
+	$(PY) -m pip install -r requirements-dev.txt

@@ -6,7 +6,7 @@ import traceback
 
 from benchmarks import (bench_allreduce, bench_checkpoint, bench_failures,
                         bench_overhead, bench_parallel_plan,
-                        bench_perf_iterations, bench_storage,
+                        bench_perf_iterations, bench_serving, bench_storage,
                         bench_throughput)
 
 MODULES = [
@@ -17,6 +17,7 @@ MODULES = [
     ("table1_failures", bench_failures),
     ("s2_4_parallel_plan", bench_parallel_plan),
     ("table2_table4_throughput", bench_throughput),
+    ("s2_serving", bench_serving),
     ("perf_hillclimb", bench_perf_iterations),
 ]
 

@@ -1,5 +1,9 @@
 """Batched serving driver (watsonx.ai-style inference cluster role).
 
+Drives the fused ragged continuous-batching engine: one jitted
+decode+sample dispatch per iteration regardless of slot positions, batched
+bucketed prefill, on-device sampling.
+
     python -m repro.launch.serve --arch qwen3-4b --reduced --requests 16
 """
 from __future__ import annotations
@@ -12,7 +16,7 @@ import numpy as np
 
 from repro.configs import CONFIGS, get_config
 from repro.models import LM
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, SamplingParams, ServeEngine
 
 
 def main():
@@ -23,6 +27,10 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 => greedy; sampling runs on device either way")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     args = ap.parse_args()
 
     import dataclasses
@@ -38,12 +46,20 @@ def main():
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size,
                               rng.integers(4, 12)).astype(np.int32)
-        eng.submit(Request(i, prompt, max_new_tokens=args.new_tokens))
+        eng.submit(Request(i, prompt, max_new_tokens=args.new_tokens,
+                           sampling=SamplingParams(
+                               temperature=args.temperature,
+                               top_k=args.top_k, top_p=args.top_p, seed=i)))
     done = eng.run_until_drained()
     wall = time.perf_counter() - t0
     total_tokens = sum(len(r.out_tokens) for r in done)
+    iters = eng.reg.counter("serve_iterations_total").get()
+    decode = eng.reg.counter("serve_decode_dispatches_total").get()
+    prefill = eng.reg.counter("serve_prefill_dispatches_total").get()
     print(f"served {len(done)} requests, {total_tokens} tokens in "
           f"{wall:.1f}s ({total_tokens/wall:.1f} tok/s)")
+    print(f"device calls: {decode:.0f} fused decode+sample "
+          f"({decode/max(iters,1):.2f}/iteration) + {prefill:.0f} prefill")
     print(f"TTFT p50 {eng.reg.histogram('serve_ttft_seconds').quantile(0.5)*1e3:.0f}ms "
           f"p95 {eng.reg.histogram('serve_ttft_seconds').quantile(0.95)*1e3:.0f}ms")
     print(f"latency p50 "

@@ -10,7 +10,9 @@ Three implementations share one set of weights:
 * ``pallas``     — the TPU kernel in ``repro.kernels.flash_attention`` (interpret
   mode on CPU); selected via ``impl="pallas"``.
 
-Decode is a single-token attention over a (B, Smax, KV, D) cache.
+Decode is a single-token attention over a (B, Smax, KV, D) cache; the cache
+index is either a shared scalar or a (B,) per-slot position vector, so a
+ragged continuous batch decodes in a single call.
 """
 from __future__ import annotations
 
@@ -206,13 +208,30 @@ def _online_block_bias(carry, kv_blk, q_blk):
 
 # ----------------------------------------------------------------- decode ----
 
+def decode_positions(cache_index, batch: int):
+    """Normalize a decode cache index to a (B,) per-slot position vector.
+
+    ``cache_index`` is either a scalar (synchronized batch: every sequence at
+    the same depth — the train/dry-run calling convention) or already a (B,)
+    vector of per-slot positions (ragged continuous batching)."""
+    idx = jnp.asarray(cache_index, jnp.int32)
+    if idx.ndim == 0:
+        idx = jnp.full((batch,), idx)
+    assert idx.shape == (batch,), (idx.shape, batch)
+    return idx
+
+
 def decode_attention(q, k_cache, v_cache, cache_index):
-    """q: (B,1,KV,G,D); caches: (B,Smax,KV,D); attends to positions <= index."""
+    """q: (B,1,KV,G,D); caches: (B,Smax,KV,D); attends to positions <= index.
+
+    ``cache_index``: scalar or (B,) per-slot positions — each slot gets its
+    own causal mask, so a ragged batch decodes in one call."""
     hd = q.shape[-1]
+    pos = decode_positions(cache_index, q.shape[0])
     s = jnp.einsum("bqkgd,bskd->bkgqs", q, k_cache).astype(jnp.float32)
     s = s / math.sqrt(hd)
-    valid = jnp.arange(k_cache.shape[1]) <= cache_index       # (Smax,)
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    valid = jnp.arange(k_cache.shape[1])[None, :] <= pos[:, None]  # (B,Smax)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     return jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache)
 
@@ -266,24 +285,39 @@ def encode_kv(p, cfg, enc_out):
     return k, v
 
 
+def _scatter_decode_kv(cache, new, positions):
+    """Per-slot cache write: cache (B,Smax,KV,D) <- new (B,1,KV,D) at
+    positions (B,).  vmap of a length-1 dynamic_update_slice lowers to a
+    batched scatter — one write per slot at its own depth."""
+    return jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+        c, n, i, axis=0))(cache, new.astype(cache.dtype), positions)
+
+
 def attention_decode_block(p, cfg, x, k_cache, v_cache, cache_index,
                            rope: bool = True):
-    """One-token decode.  x: (B,1,d); caches (B,Smax,KV,D).  Returns
-    (y, new_k_cache, new_v_cache)."""
+    """One-token decode.  x: (B,1,d); caches (B,Smax,KV,D).  ``cache_index``
+    is a scalar (synchronized batch) or a (B,) vector of per-slot positions
+    (ragged continuous batching: per-slot RoPE, scatter-write, and causal
+    mask).  Returns (y, new_k_cache, new_v_cache)."""
     b = x.shape[0]
-    pos = jnp.full((b, 1), cache_index, jnp.int32)
-    q, k, v = project_qkv(p, cfg, x, x, pos, pos, rope=rope)
+    per_slot = jnp.ndim(cache_index) > 0
+    pos = decode_positions(cache_index, b)
+    q, k, v = project_qkv(p, cfg, x, x, pos[:, None], pos[:, None], rope=rope)
     # Pin the cache sharding (batch over DP, sequence over the model axis —
     # flash-decoding style).  Without this GSPMD may back-propagate the
     # attention head sharding onto the cache and materialize a full-cache
     # reshard (observed: 2×38 GB all-gathers per step on qwen3 decode_32k).
     cache_axes = ("batch", "kv_seq", "kv_heads", None)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        k_cache, k.astype(k_cache.dtype), cache_index, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        v_cache, v.astype(v_cache.dtype), cache_index, axis=1)
+    if per_slot:
+        k_cache = _scatter_decode_kv(k_cache, k, pos)
+        v_cache = _scatter_decode_kv(v_cache, v, pos)
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), cache_index, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cache_index, axis=1)
     k_cache = constrain(k_cache, cache_axes)
     v_cache = constrain(v_cache, cache_axes)
-    y = decode_attention(q, k_cache, v_cache, cache_index)
+    y = decode_attention(q, k_cache, v_cache, pos)
     y = constrain(y, ("batch", None, None, None, None))
     return output_proj(p, cfg, y), k_cache, v_cache

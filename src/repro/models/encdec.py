@@ -122,6 +122,9 @@ def init_cache(cfg, batch_size: int, max_seq: int, enc_len: int,
 
 def decode_step(params, cfg, tokens, cache, cache_index,
                 scan_layers: bool = True):
+    """One-token decoder step.  ``cache_index``: scalar or (B,) per-slot
+    positions (ragged batching) — cross-attention KV is position-free, the
+    self-attention cache is scatter-written per slot."""
     dtype = jnp.dtype(cfg.dtype)
     h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dtype)
 

@@ -65,6 +65,8 @@ class LM:
 
     def decode_step(self, params, tokens, cache, cache_index,
                     scan_layers: bool = True):
+        """One-token decode.  ``cache_index`` is a scalar shared position or
+        a (B,) per-slot position vector (ragged continuous batching)."""
         if self.is_encdec:
             return encdec.decode_step(params, self.cfg, tokens, cache,
                                       cache_index, scan_layers=scan_layers)

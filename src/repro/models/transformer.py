@@ -379,7 +379,13 @@ def _scan_or_unroll(body, init, xs, n: int, scan: bool):
 
 def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
                 scan_layers: bool = True):
-    """One-token decode.  tokens: (B, 1).  Returns (logits, new_cache)."""
+    """One-token decode.  tokens: (B, 1).  Returns (logits, new_cache).
+
+    ``cache_index`` is a scalar (all sequences at the same depth) or a (B,)
+    per-slot position vector — the ragged continuous-batching path, where
+    every slot scatter-writes and masks at its own position in one call.
+    Recurrent families (ssm / hybrid mixer state) are position-free; only
+    their attention sub-blocks consume the index."""
     del img_embeds  # image tokens only participate via the prefill cache
     dtype = jnp.dtype(cfg.dtype)
     h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dtype)

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel.sharding import shard_map
+
 
 def quantize_int8(x, seed_err=None):
     """Symmetric per-tensor int8 quantization with error feedback input."""
@@ -52,7 +54,7 @@ def make_compressed_grad_sync(mesh: Mesh, axis: str):
     device partial gradients (pure-DP layout)."""
 
     def one(g, e):
-        fn = jax.shard_map(
+        fn = shard_map(
             partial(compressed_allreduce_mean, axis=axis),
             mesh=mesh, in_specs=(P(axis), P(axis)),
             out_specs=(P(), P(axis)), check_vma=False)

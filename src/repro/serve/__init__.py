@@ -1,4 +1,6 @@
 from repro.serve.engine import Request, SamplingParams, ServeEngine, \
     sample_token
+from repro.serve.sampling import filtered_probs, sample_batch
 
-__all__ = ["Request", "SamplingParams", "ServeEngine", "sample_token"]
+__all__ = ["Request", "SamplingParams", "ServeEngine", "sample_token",
+           "filtered_probs", "sample_batch"]

@@ -1,17 +1,36 @@
-"""Batched serving engine: continuous batching over a fixed-slot KV cache
-(watsonx.ai-style inference — the paper's clusters are "constantly moved
-between training and inferencing" so the same model stack must serve).
+"""Ragged continuous batching: one fused decode+sample dispatch per iteration.
 
-Design: B cache slots; each incoming request is prefilled individually
-(right-aligned into its slot is unnecessary — slots are per-sequence) and
-then joins the synchronized decode batch.  Finished slots (EOS or max_len)
-are freed and refilled from the queue — the 'continuous batching' part.
+watsonx.ai-style inference — the paper's clusters are "constantly moved
+between training and inferencing", so the same model stack must serve, and
+per-step overheads must stay in the <5% regime of Figs 5/6/8.  Design:
+
+* **B fixed cache slots**, each holding one in-flight request at its own
+  depth.  ``decode_step`` takes a per-slot position vector ``(B,)`` (per-slot
+  RoPE, scatter-writes, causal masks), so an arbitrarily ragged batch costs
+  exactly **one jitted device call per engine iteration**.  (The seed engine
+  grouped slots by position and paid one dispatch per *distinct position* —
+  worst case batch-1 decode.)
+* **Batched prefill**: an admitted prompt is written into its slot's cache by
+  a single ``lm.forward(collect_cache=True)`` call whose K/V block is
+  scatter-copied into the engine cache on device; prompt lengths are bucketed
+  to powers of two to bound retracing.  (The seed prefilled token-by-token
+  through the full-batch decode step.)
+* **On-device sampling**: greedy / temperature / top-k / top-p run as a
+  vectorized kernel (``repro.serve.sampling``) fused into the decode
+  dispatch.  The only host transfer per iteration is the (B,) vector of
+  sampled token ids; free slots are masked inert via ``active_mask``.
+
+Finished slots (EOS or max_len) are freed and refilled from the queue — the
+'continuous batching' part.  Dispatch accounting is exported through the
+metrics registry (``serve_decode_dispatches_total`` /
+``serve_iterations_total`` / ``serve_prefill_dispatches_total``) so the
+one-call-per-iteration invariant is observable, not asserted.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +38,7 @@ import numpy as np
 
 from repro.models import ForwardOpts, LM
 from repro.core.telemetry import MetricsRegistry
+from repro.serve.sampling import sample_batch
 
 
 @dataclass
@@ -36,17 +56,16 @@ class Request:
     max_new_tokens: int = 32
     eos_id: int = -1                 # -1: never stops early
     sampling: SamplingParams = field(default_factory=SamplingParams)
+    img_embeds: Optional[np.ndarray] = None   # (num_image_tokens, d) for vlm
     out_tokens: List[int] = field(default_factory=list)
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
 
 
-def sample_token(logits: np.ndarray, params: SamplingParams,
-                 step: int) -> int:
-    """Greedy / temperature / top-k / top-p sampling over a 1-D logit row."""
-    if params.temperature <= 0.0:
-        return int(np.argmax(logits))
+def _filtered_probs_np(logits: np.ndarray, params: SamplingParams) -> np.ndarray:
+    """The (float64 numpy) filtered distribution ``sample_token`` draws from —
+    the per-row reference the vectorized device sampler is tested against."""
     x = logits.astype(np.float64) / params.temperature
     if params.top_k > 0:
         kth = np.partition(x, -params.top_k)[-params.top_k]
@@ -61,6 +80,16 @@ def sample_token(logits: np.ndarray, params: SamplingParams,
         mask[order[:cut]] = 1.0
         p = p * mask
         p /= p.sum()
+    return p
+
+
+def sample_token(logits: np.ndarray, params: SamplingParams,
+                 step: int) -> int:
+    """Greedy / temperature / top-k / top-p sampling over a 1-D logit row
+    (host-side reference implementation; the engine samples on device)."""
+    if params.temperature <= 0.0:
+        return int(np.argmax(logits))
+    p = _filtered_probs_np(logits, params)
     rng = np.random.default_rng((params.seed, step))
     return int(rng.choice(len(p), p=p))
 
@@ -75,7 +104,7 @@ class ServeEngine:
         # which holds for attention KV caches but not recurrent state
         assert lm.cfg.family in ("dense", "moe", "vlm"), (
             "ServeEngine supports attention-cache families; recurrent archs "
-            "serve via launch/serve.py's synchronized batch path")
+            "serve via a synchronized full-batch decode loop")
         self.lm = lm
         self.params = params
         self.B = max_batch
@@ -84,16 +113,88 @@ class ServeEngine:
         self.opts = opts
         self.reg = registry or MetricsRegistry()
         self.greedy = greedy
+        self.img_len = (lm.cfg.num_image_tokens
+                        if lm.cfg.family == "vlm" else 0)
         dt = jnp.float32 if lm.cfg.dtype == "float32" else jnp.bfloat16
         self.cache = lm.init_cache(max_batch, max_seq, dtype=dt)
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int32)   # next write index
         self.queue: List[Request] = []
-        self._decode = jax.jit(
-            lambda p, t, c, i: lm.decode_step(p, t, c, i))
+        # per-slot device-call state: the pending (sampled, not yet emitted)
+        # token plus the sampling params, mirrored as flat arrays so the
+        # fused dispatch takes plain (B,) tensors
+        self.next_token = np.zeros(max_batch, np.int32)
+        self.active = np.zeros(max_batch, bool)
+        self.temps = np.zeros(max_batch, np.float32)
+        self.top_ks = np.zeros(max_batch, np.int32)
+        self.top_ps = np.ones(max_batch, np.float32)
+        self.seeds = np.zeros(max_batch, np.int32)
+        self._fused = jax.jit(self._make_fused(), static_argnums=(10,))
+        self._prefill = jax.jit(self._make_prefill())
+
+    # ---------------------------------------------------------- jit builds ----
+    def _make_fused(self):
+        """One device call: decode all B slots at their own positions, then
+        sample the next token for every slot, vectorized.  Returns the (B,)
+        sampled ids (zeros on inactive slots) and the new cache.
+
+        ``all_greedy`` is static: the common all-greedy batch compiles to a
+        bare argmax, skipping the top-k/top-p sort machinery entirely (at
+        most two jit cache entries)."""
+        lm, vocab = self.lm, self.lm.cfg.vocab_size
+
+        def fused(params, tokens, cache, positions, active,
+                  temps, top_ks, top_ps, seeds, steps, all_greedy):
+            logits, cache = lm.decode_step(params, tokens, cache, positions)
+            rows = logits[:, -1, :vocab].astype(jnp.float32)
+            if all_greedy:
+                tok = jnp.argmax(rows, axis=-1).astype(jnp.int32)
+            else:
+                tok = sample_batch(rows, temps, top_ks, top_ps, seeds, steps)
+            return jnp.where(active, tok, 0), cache
+
+        return fused
+
+    def _make_prefill(self):
+        """Whole-prompt prefill: forward with cache collection, scatter the
+        K/V block into this slot's rows of the engine cache, and sample the
+        first token on device.  jit caches one trace per prompt bucket."""
+        lm, opts, vocab = self.lm, self.opts, self.lm.cfg.vocab_size
+        has_img = self.img_len > 0
+
+        def run(params, tokens, img_embeds, cache, slot, last_idx,
+                temp, top_k, top_p, seed):
+            batch = {"tokens": tokens}
+            if has_img:
+                batch["img_embeds"] = img_embeds
+            logits, _, pcache = lm.forward(params, batch, opts,
+                                           collect_cache=True)
+
+            def write(big, small):
+                # big: (L, B, S, ...) engine cache; small: (L, 1, P, ...)
+                start = (0, slot, 0) + (0,) * (big.ndim - 3)
+                return jax.lax.dynamic_update_slice(
+                    big, small.astype(big.dtype), start)
+
+            cache = jax.tree.map(write, cache, pcache)
+            row = logits[0, last_idx, :vocab].astype(jnp.float32)
+            tok = sample_batch(row[None], temp[None], top_k[None],
+                               top_p[None], seed[None],
+                               jnp.zeros((1,), jnp.int32))
+            return tok[0], cache
+
+        return run
 
     # ------------------------------------------------------------- intake ----
     def submit(self, req: Request):
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.id}: empty prompt "
+                             "(nothing to prefill or sample from)")
+        if len(req.prompt) + self.img_len >= self.S:
+            raise ValueError(
+                f"request {req.id}: prompt length {len(req.prompt)} "
+                f"(+{self.img_len} image tokens) leaves no room to decode "
+                f"in a max_seq={self.S} cache")
         req.submitted_at = time.perf_counter()
         self.queue.append(req)
         self.reg.counter("serve_requests_total").inc()
@@ -103,84 +204,90 @@ class ServeEngine:
 
     # ------------------------------------------------------------ prefill ----
     def _admit(self):
-        """Prefill queued requests into free slots one at a time (per-slot
-        cache writes via token-by-token decode keeps the engine simple and
-        exactly consistent with the decode path)."""
+        """Prefill queued requests into free slots — one forward pass per
+        prompt (bucketed to powers of two), whose K/V block lands in the
+        slot's cache rows in the same device call."""
         for slot in self._free_slots():
             if not self.queue:
                 break
             req = self.queue.pop(0)
-            pos = 0
-            for tok in req.prompt:
-                logits, self.cache = self._step_one(slot, int(tok), pos)
-                pos += 1
+            plen = len(req.prompt)
+            bucket = 1 << (plen - 1).bit_length()          # next power of two
+            bucket = min(bucket, self.S - self.img_len)
+            tokens = np.zeros((1, bucket), np.int32)
+            tokens[0, :plen] = req.prompt
+            if self.img_len:
+                img = (req.img_embeds if req.img_embeds is not None
+                       else np.zeros((self.img_len, self.lm.cfg.d_model)))
+                img = jnp.asarray(img, self.cache["layers"]["k"].dtype)[None]
+            else:
+                img = None
+            sp = req.sampling
+            tok, self.cache = self._prefill(
+                self.params, jnp.asarray(tokens), img, self.cache,
+                jnp.int32(slot), jnp.int32(self.img_len + plen - 1),
+                jnp.float32(sp.temperature), jnp.int32(sp.top_k),
+                jnp.float32(sp.top_p), jnp.int32(sp.seed))
             self.slot_req[slot] = req
-            self.slot_pos[slot] = pos
-            req._last_logits = logits   # type: ignore[attr-defined]
-
-    def _step_one(self, slot: int, token: int, pos: int):
-        """Single-slot, single-token cache update: run the batched decode step
-        with only this slot's token (other slots get a dummy token written to
-        a scratch position = their current pos; harmless since it is
-        overwritten when they actually decode).  For simplicity and batch-1
-        exactness the engine serializes prefill; production prefill is the
-        dedicated ``lm.prefill`` path (see launch/serve.py)."""
-        tokens = np.zeros((self.B, 1), np.int32)
-        tokens[slot, 0] = token
-        # decode_step uses one shared cache_index; emulate per-slot positions
-        # by running with this slot's position (other slots' writes at that
-        # index are overwritten later by their own decodes).
-        logits, cache = self._decode(self.params, jnp.asarray(tokens),
-                                     self.cache, jnp.int32(pos))
-        return np.asarray(logits[slot, -1]), cache
+            self.slot_pos[slot] = self.img_len + plen
+            self.next_token[slot] = int(tok)
+            self.active[slot] = True
+            self.temps[slot] = sp.temperature
+            self.top_ks[slot] = sp.top_k
+            self.top_ps[slot] = sp.top_p
+            self.seeds[slot] = sp.seed
+            self.reg.counter("serve_prefill_dispatches_total").inc()
+            self.reg.counter("serve_prefill_tokens_total").inc(plen)
 
     # ------------------------------------------------------------- decode ----
     def step(self):
-        """One engine iteration: admit, then one synchronized decode step for
-        all active slots at their own positions (slots must share a cache
-        index per decode_step call; the engine groups slots by position)."""
+        """One engine iteration: admit, then **one** fused decode+sample
+        dispatch for all active slots at their own positions."""
         self._admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
+        active_idx = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active_idx:
             return False
-        # group slots by position so each group shares a cache_index
-        by_pos: Dict[int, List[int]] = {}
-        for i in active:
-            by_pos.setdefault(int(self.slot_pos[i]), []).append(i)
-        for pos, slots in sorted(by_pos.items()):
-            tokens = np.zeros((self.B, 1), np.int32)
-            for i in slots:
-                req = self.slot_req[i]
-                last = req._last_logits  # type: ignore[attr-defined]
-                vocab = self.lm.cfg.vocab_size
-                tokens[i, 0] = sample_token(
-                    np.asarray(last[:vocab]), req.sampling,
+        # per-slot sample-step index: the token being sampled now is
+        # out_tokens[len]+1 deep in the request's stream (the pending token,
+        # sampled earlier, is #len and gets emitted this iteration)
+        steps = np.zeros(self.B, np.int32)
+        for i in active_idx:
+            steps[i] = len(self.slot_req[i].out_tokens) + 1
+        positions = np.minimum(self.slot_pos, self.S - 1)
+        all_greedy = bool(np.all(self.temps[self.active] <= 0.0))
+        sampled, self.cache = self._fused(
+            self.params, jnp.asarray(self.next_token[:, None]), self.cache,
+            jnp.asarray(positions), jnp.asarray(self.active),
+            jnp.asarray(self.temps), jnp.asarray(self.top_ks),
+            jnp.asarray(self.top_ps), jnp.asarray(self.seeds),
+            jnp.asarray(steps), all_greedy)
+        self.reg.counter("serve_decode_dispatches_total").inc()
+        self.reg.counter("serve_iterations_total").inc()
+        sampled = np.asarray(sampled)     # the one (B,) host transfer
+        now = time.perf_counter()
+        for i in active_idx:
+            req = self.slot_req[i]
+            tok = int(self.next_token[i])
+            req.out_tokens.append(tok)
+            if req.first_token_at is None:
+                req.first_token_at = now
+                self.reg.histogram("serve_ttft_seconds").observe(
+                    now - req.submitted_at)
+            self.slot_pos[i] += 1
+            done = (len(req.out_tokens) >= req.max_new_tokens
+                    or tok == req.eos_id
+                    or self.slot_pos[i] >= self.S)
+            if done:
+                req.done_at = now
+                self.reg.counter("serve_tokens_total").inc(
                     len(req.out_tokens))
-            logits, self.cache = self._decode(
-                self.params, jnp.asarray(tokens), self.cache, jnp.int32(pos))
-            logits = np.asarray(logits[:, -1])
-            now = time.perf_counter()
-            for i in slots:
-                req = self.slot_req[i]
-                tok = int(tokens[i, 0])
-                req.out_tokens.append(tok)
-                if req.first_token_at is None:
-                    req.first_token_at = now
-                    self.reg.histogram("serve_ttft_seconds").observe(
-                        now - req.submitted_at)
-                req._last_logits = logits[i]  # type: ignore[attr-defined]
-                self.slot_pos[i] += 1
-                done = (len(req.out_tokens) >= req.max_new_tokens
-                        or tok == req.eos_id
-                        or self.slot_pos[i] >= self.S)
-                if done:
-                    req.done_at = now
-                    self.reg.counter("serve_tokens_total").inc(
-                        len(req.out_tokens))
-                    self.reg.histogram("serve_latency_seconds").observe(
-                        now - req.submitted_at)
-                    self.finished.append(req)
-                    self.slot_req[i] = None
+                self.reg.histogram("serve_latency_seconds").observe(
+                    now - req.submitted_at)
+                self.finished.append(req)
+                self.slot_req[i] = None
+                self.active[i] = False
+            else:
+                self.next_token[i] = sampled[i]
         return True
 
     def run_until_drained(self, max_iters: int = 10_000) -> List[Request]:

@@ -1,0 +1,67 @@
+"""On-device batched sampling for the serve engine.
+
+Greedy / temperature / top-k / top-p over a (B, V) logit matrix as one
+vectorized, jittable computation.  The engine fuses this into the decode
+dispatch, so the only host transfer per engine iteration is the (B,) vector
+of sampled token ids (the seed engine pulled full per-slot logit rows to the
+host and sampled with numpy — exactly the per-step overhead the paper's
+Figs 5/6/8 warn about).
+
+Per-row randomness is derived as ``fold_in(key(seed), step)``: a request's
+sample stream depends only on its own (seed, step), never on batch
+composition — continuous batching stays reproducible per request.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def filtered_probs(logits, temperature, top_k, top_p):
+    """Per-row filtered sampling distribution.
+
+    logits: (B, V) float; temperature / top_k / top_p: (B,) per-slot params.
+    Rows with ``top_k == 0`` skip the top-k filter; rows with
+    ``top_p >= 1`` skip the nucleus filter.  Rows with ``temperature <= 0``
+    are greedy — the caller overrides them with argmax; here their
+    temperature is clamped to 1 merely to keep the softmax finite.
+    Returns (B, V) probabilities summing to 1 per row.
+    """
+    v = logits.shape[-1]
+    t = jnp.where(temperature > 0, temperature, 1.0)[:, None]
+    x = logits.astype(jnp.float32) / t
+    # top-k: mask everything strictly below the k-th largest value
+    k = jnp.clip(top_k, 0, v)
+    sorted_desc = jnp.sort(x, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(sorted_desc, jnp.maximum(k - 1, 0)[:, None],
+                              axis=-1)
+    x = jnp.where((k[:, None] > 0) & (x < kth), -jnp.inf, x)
+    p = jax.nn.softmax(x, axis=-1)
+    # nucleus: keep a token iff the cumulative mass *before* it (descending
+    # order) is < top_p — i.e. the smallest prefix whose mass reaches top_p
+    order = jnp.argsort(-p, axis=-1)
+    p_sorted = jnp.take_along_axis(p, order, axis=-1)
+    cum = jnp.cumsum(p_sorted, axis=-1)
+    keep_sorted = (cum - p_sorted) < top_p[:, None]
+    inv = jnp.argsort(order, axis=-1)
+    keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+    keep = keep | (top_p[:, None] >= 1.0)
+    p = jnp.where(keep, p, 0.0)
+    return p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+
+
+def sample_batch(logits, temperature, top_k, top_p, seeds, steps):
+    """Vectorized sampling: (B, V) logits -> (B,) int32 token ids.
+
+    Greedy rows (temperature <= 0) take argmax; the rest draw from the
+    filtered distribution with a per-row key folded from (seed, step).
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    p = filtered_probs(logits, temperature, top_k, top_p)
+
+    def draw(p_row, seed, step):
+        key = jax.random.fold_in(jax.random.key(seed), step)
+        return jax.random.categorical(key, jnp.log(jnp.maximum(p_row, 1e-30)))
+
+    sampled = jax.vmap(draw)(p, seeds, steps).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)

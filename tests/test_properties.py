@@ -3,6 +3,11 @@ import math
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# optional dev dependency (requirements-dev.txt): skip the module instead of
+# erroring the whole suite's collection when hypothesis isn't installed
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.youngs import (lost_fraction, optimal_lost_fraction,
