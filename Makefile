@@ -1,19 +1,28 @@
 # Developer entry points.  `make smoke` is the CI gate: the tier-1 test
-# suite plus an import-check of the benchmark harness, so dependency drift
-# (e.g. an unguarded optional import) can't silently break collection again.
+# suite, an import-check of the benchmark harness (so dependency drift —
+# e.g. an unguarded optional import — can't silently break collection
+# again), and the serving benchmark on its tiny config (fused-dispatch
+# invariant + paged-vs-contiguous KV parity and memory comparison).
 
 PY ?= python
 
-.PHONY: test smoke bench dev-deps
+.PHONY: test smoke bench bench-serve dev-deps
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
-smoke: test
+smoke: test bench-serve
 	PYTHONPATH=src:. $(PY) -c "import benchmarks.run; print('benchmarks: import ok')"
 
 bench:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py
+
+# serving-only slice of the harness: ragged fused decode vs the grouped
+# seed engine, plus the paged-memory admission comparison at a fixed HBM
+# budget — asserts paged/contiguous token parity as a side effect
+bench-serve:
+	PYTHONPATH=src:. $(PY) -c "from benchmarks import bench_serving; \
+	[print(f'{n},{u:.1f},{d}') for n, u, d in bench_serving.run()]"
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

@@ -1,10 +1,15 @@
 """Serving benchmark: fused ragged decode vs the seed grouped-by-position
-engine (tokens/s, TTFT, and decode dispatches per engine iteration on a
-ragged workload — the perf win is measured, not asserted).
+engine, and the paged KV cache vs dense rows (tokens/s, TTFT, decode
+dispatches per engine iteration, and concurrent admissions at a fixed HBM
+budget — the perf and memory wins are measured, not asserted).
 
-The workload is deliberately ragged: mixed prompt lengths put every slot at
-a distinct position, which degrades the seed engine to one decode dispatch
-per *slot* per iteration while the fused engine stays at exactly one.
+The decode workload is deliberately ragged: mixed prompt lengths put every
+slot at a distinct position, which degrades the seed engine to one decode
+dispatch per *slot* per iteration while the fused engine stays at exactly
+one.  The memory workload is deliberately short and same-prefixed: dense
+rows pin ``max_seq`` positions per slot regardless, while the paged backend
+pins ``ceil(len/page)`` pages and shares the common prefix page — that gap
+is the concurrency multiplier under a fixed byte budget.
 """
 from __future__ import annotations
 
@@ -18,7 +23,8 @@ import numpy as np
 
 from repro.configs import CONFIGS
 from repro.models import LM
-from repro.serve import Request, ServeEngine
+from repro.serve import (Request, ServeEngine, contiguous_kv_bytes,
+                         make_cache, page_kv_bytes)
 from repro.serve.engine import sample_token
 
 
@@ -138,6 +144,62 @@ def _drain_measured(eng, cfg, n_requests: int, new_tokens: int):
     return wall, toks, ttft
 
 
+def _admission_at_budget(lm, cfg):
+    """Concurrent short requests admitted under one fixed HBM budget.
+
+    The budget is what a 4-slot dense cache pins at max_seq=64.  Everything
+    is sized from that number: the dense engine gets 4 slots; the paged
+    engines get ``budget / page_bytes`` physical pages (same HBM) and a
+    generous slot count so *memory*, not slots, is the binding constraint.
+    The workload is N identical short prompts (a shared system prompt) —
+    the serving pattern the paper's train<->inference flips make common.
+
+    The budget governs *pinned* cache bytes.  The XLA paged decode still
+    materializes a dense-equivalent gathered KV view per step as a
+    transient, which grows with the enlarged concurrent batch (see
+    ``attention.gather_pages``); the paged flash-decode kernel that removes
+    it is a ROADMAP item.
+
+    Admission is counted through backend ``alloc`` bookkeeping directly —
+    the same host-side path ``ServeEngine._admit`` reserves through (whose
+    end-to-end behaviour tests/test_kvcache.py covers), with zero device
+    dispatches, so this comparison adds no jit compiles to ``make smoke``.
+    """
+    dense_slots, max_seq, page = 4, 64, 8
+    budget = contiguous_kv_bytes(cfg, dense_slots, max_seq, jnp.float32)
+    n_pages = budget // page_kv_bytes(cfg, page, jnp.float32)
+    n_req, plen, new_tokens = 40, 12, 4
+    prompt = (np.arange(plen) % cfg.vocab_size).astype(np.int32)
+    footprint = min(plen + new_tokens, max_seq)
+
+    def admitted(slots, backend, **kw):
+        kv = make_cache(lm, slots, max_seq, dtype=jnp.float32,
+                        backend=backend, **kw)
+        n = 0
+        while n < slots and kv.alloc(n, footprint, prefix=prompt) is not None:
+            n += 1
+        return n, kv.memory_stats()
+
+    n_dense, dense_stats = admitted(dense_slots, "contiguous")
+    n_paged, paged_stats = admitted(n_req, "paged", page_size=page,
+                                    num_pages=n_pages)
+    n_noshare, noshare_stats = admitted(n_req, "paged", page_size=page,
+                                        num_pages=n_pages,
+                                        prefix_sharing=False)
+    assert dense_stats.bytes_total == budget
+    assert paged_stats.bytes_total <= budget
+    return [
+        ("serving/concurrent_at_budget_dense", 0.0,
+         f"{n_dense} admitted ({budget/1e3:.0f} kB budget)"),
+        ("serving/concurrent_at_budget_paged", 0.0,
+         f"{n_paged} admitted (x{n_paged/max(n_dense,1):.1f} vs dense; "
+         f"{paged_stats.pages_in_use}/{paged_stats.pages_total} pages, "
+         f"{paged_stats.pages_shared} shared)"),
+        ("serving/concurrent_at_budget_paged_nosharing", 0.0,
+         f"{n_noshare} admitted (x{n_noshare/max(n_dense,1):.1f} vs dense)"),
+    ]
+
+
 def run():
     cfg = dataclasses.replace(CONFIGS["llama3.2-3b"].reduced(),
                               dtype="float32", num_layers=2)
@@ -145,7 +207,7 @@ def run():
     params = lm.init(jax.random.key(0))
     max_batch, max_seq, new_tokens, n_requests = 8, 64, 8, 12
 
-    fused = ServeEngine(lm, params, max_batch, max_seq)
+    fused = ServeEngine(lm, params, max_batch, max_seq)   # paged default
     fused_wall, fused_toks, fused_ttft = _drain_measured(
         fused, cfg, n_requests, new_tokens)
     # counters cover warmup+measured identically for both engines, so the
@@ -153,6 +215,19 @@ def run():
     fused_iters = fused.reg.counter("serve_iterations_total").get()
     fused_decode = fused.reg.counter("serve_decode_dispatches_total").get()
     fused_prefill = fused.reg.counter("serve_prefill_dispatches_total").get()
+    pf_batch = fused.reg.histogram("serve_prefill_batch_size")
+
+    contig = ServeEngine(lm, params, max_batch, max_seq,
+                         cache_backend="contiguous")
+    contig_wall, contig_toks, _ = _drain_measured(
+        contig, cfg, n_requests, new_tokens)
+
+    # paged and contiguous backends must emit identical greedy streams —
+    # warmup and measured passes reuse request ids, so compare the full
+    # multiset of (id, stream) pairs, not a last-write-wins dict
+    fused_out = sorted((r.id, tuple(r.out_tokens)) for r in fused.finished)
+    contig_out = sorted((r.id, tuple(r.out_tokens)) for r in contig.finished)
+    assert fused_out == contig_out, "paged/contiguous token divergence"
 
     ref = GroupedReferenceEngine(lm, params, max_batch, max_seq)
     ref_wall, ref_toks, ref_ttft = _drain_measured(
@@ -162,10 +237,13 @@ def run():
     reduction = ref.dispatches / max(fused_decode + fused_prefill, 1)
     return [
         ("serving/fused_us_per_tok", fused_wall / max(fused_toks, 1) * 1e6,
-         f"tok_s={fused_toks / fused_wall:.1f}"),
+         f"tok_s={fused_toks / fused_wall:.1f} (paged kv)"),
         ("serving/fused_ttft_p50", fused_ttft * 1e6,
          f"decode_calls_per_iter="
          f"{fused_decode / max(fused_iters, 1):.2f}"),
+        ("serving/contiguous_us_per_tok",
+         contig_wall / max(contig_toks, 1) * 1e6,
+         f"tok_s={contig_toks / contig_wall:.1f} (dense kv, parity ok)"),
         ("serving/grouped_us_per_tok", ref_wall / max(ref_toks, 1) * 1e6,
          f"tok_s={ref_toks / ref_wall:.1f}"),
         ("serving/grouped_ttft_p50", ref_ttft * 1e6,
@@ -173,5 +251,6 @@ def run():
          f"{ref.dispatches / max(ref.iterations, 1):.2f}"),
         ("serving/dispatch_reduction", 0.0,
          f"{reduction:.1f}x ({ref.dispatches} grouped vs "
-         f"{fused_decode + fused_prefill:.0f} fused device calls)"),
-    ]
+         f"{fused_decode + fused_prefill:.0f} fused device calls; "
+         f"prefill batch p50={pf_batch.quantile(0.5):.0f})"),
+    ] + _admission_at_budget(lm, cfg)

@@ -119,6 +119,22 @@ def main():
     hlo = compiled.as_text()
     coll = parse_collectives(hlo)
     mem = compiled.memory_analysis()
+    # The paper's pods flip between training and inferencing: project how
+    # much serve-side KV capacity the leftover HBM buys on this arch, dense
+    # rows vs paged (the serve engine's default backend).  Pure byte math —
+    # nothing here is compiled or allocated.  Attention-cache families
+    # only: recurrent state has no (L, B, S, KV, D) cache to page.
+    kv_proj = None
+    if cfg.family in ("dense", "vlm", "moe"):
+        from repro.serve.kvcache import contiguous_kv_bytes, page_kv_bytes
+        kv_b, kv_s, kv_page = 64, 8192, 16
+        kv_proj = {
+            "batch": kv_b, "max_seq": kv_s, "page_size": kv_page,
+            "contiguous_bytes": contiguous_kv_bytes(cfg, kv_b, kv_s,
+                                                    jnp.bfloat16),
+            "bytes_per_page": page_kv_bytes(cfg, kv_page, jnp.bfloat16),
+            "pages_in_dense_equiv": kv_b * (kv_s // kv_page),
+        }
     rec = {
         "arch": args.arch, "shape": f"pp_fwd_b{b}_s{s}",
         "mesh": "pod2x16x16_PP", "tag": "pp", "chips": 512, "ok": True,
@@ -130,6 +146,7 @@ def main():
         "memory_analysis": {k: int(getattr(mem, k)) for k in
                             ("argument_size_in_bytes", "temp_size_in_bytes")
                             if hasattr(mem, k)},
+        "serve_kv_projection": kv_proj,
     }
     out = OUT_DIR / "pod2x16x16" / f"{args.arch}__pp_fwd.json"
     out.parent.mkdir(parents=True, exist_ok=True)
@@ -139,6 +156,13 @@ def main():
           f"collective-permute hops={cp['count']} "
           f"({cp['bytes']/1e9:.2f} GB/dev) "
           f"total coll={coll['total_bytes']/1e9:.2f} GB/dev")
+    if kv_proj is not None:
+        print(f"     serve KV projection (b{kv_proj['batch']} "
+              f"s{kv_proj['max_seq']}): dense "
+              f"{kv_proj['contiguous_bytes']/1e9:.2f} GB = "
+              f"{kv_proj['pages_in_dense_equiv']} pages of "
+              f"{kv_proj['page_size']} "
+              f"({kv_proj['bytes_per_page']/1e6:.2f} MB/page)")
 
 
 if __name__ == "__main__":

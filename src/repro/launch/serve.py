@@ -2,9 +2,13 @@
 
 Drives the fused ragged continuous-batching engine: one jitted
 decode+sample dispatch per iteration regardless of slot positions, batched
-bucketed prefill, on-device sampling.
+group prefill, on-device sampling, and a pluggable KV cache — paged
+(page-table indirection + prefix sharing + admission control) by default,
+contiguous dense rows via ``--cache-backend contiguous``.
 
     python -m repro.launch.serve --arch qwen3-4b --reduced --requests 16
+    python -m repro.launch.serve --cache-backend paged --page-size 8 \
+        --num-pages 48   # tight pool: watch admissions defer, not OOM
 """
 from __future__ import annotations
 
@@ -31,6 +35,13 @@ def main():
                     help="0 => greedy; sampling runs on device either way")
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--cache-backend", default="paged",
+                    choices=["paged", "contiguous"])
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="physical page pool size (default: dense-equivalent"
+                         " capacity); smaller pools defer admissions")
+    ap.add_argument("--no-prefix-sharing", action="store_true")
     args = ap.parse_args()
 
     import dataclasses
@@ -39,7 +50,10 @@ def main():
         cfg = dataclasses.replace(cfg.reduced(), dtype="float32")
     lm = LM(cfg)
     params = lm.init(jax.random.key(0))
-    eng = ServeEngine(lm, params, args.max_batch, args.max_seq)
+    eng = ServeEngine(lm, params, args.max_batch, args.max_seq,
+                      cache_backend=args.cache_backend,
+                      page_size=args.page_size, num_pages=args.num_pages,
+                      prefix_sharing=not args.no_prefix_sharing)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -64,6 +78,14 @@ def main():
           f"p95 {eng.reg.histogram('serve_ttft_seconds').quantile(0.95)*1e3:.0f}ms")
     print(f"latency p50 "
           f"{eng.reg.histogram('serve_latency_seconds').quantile(0.5):.2f}s")
+    st = eng.kv.memory_stats()
+    deferred = eng.reg.counter("serve_admission_deferred_total").get()
+    pf_h = eng.reg.histogram("serve_prefill_batch_size")
+    print(f"kv cache [{st.backend}]: {st.bytes_total/1e6:.2f} MB pinned"
+          + (f", {st.pages_total} pages of {st.page_size}"
+             if st.backend == "paged" else "")
+          + f"; admissions deferred={deferred:.0f}; "
+          f"prefill batch p50={pf_h.quantile(0.5):.0f}")
 
 
 if __name__ == "__main__":

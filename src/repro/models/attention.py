@@ -10,9 +10,18 @@ Three implementations share one set of weights:
 * ``pallas``     — the TPU kernel in ``repro.kernels.flash_attention`` (interpret
   mode on CPU); selected via ``impl="pallas"``.
 
-Decode is a single-token attention over a (B, Smax, KV, D) cache; the cache
-index is either a shared scalar or a (B,) per-slot position vector, so a
-ragged continuous batch decodes in a single call.
+Decode is a single-token attention over a KV cache; the cache index is either
+a shared scalar or a (B,) per-slot position vector, so a ragged continuous
+batch decodes in a single call.  Two cache layouts share the decode math:
+
+* **contiguous** — (B, Smax, KV, D) dense rows per slot (train/dry-run).
+* **paged**      — a (P, page, KV, D) physical page pool plus a (B, M) int32
+  page table; slot positions resolve through the table (pos -> page
+  ``table[b, pos // page]``, row ``pos % page``), so slots only pin the pages
+  they actually use and identical prompt prefixes can share physical pages
+  (``repro.serve.kvcache``).  Physical page 0 is a scratch sink: freed slots'
+  table rows point at it, so masked/inactive decode writes land in garbage
+  space instead of pages that may since belong to another request.
 """
 from __future__ import annotations
 
@@ -221,13 +230,41 @@ def decode_positions(cache_index, batch: int):
     return idx
 
 
-def decode_attention(q, k_cache, v_cache, cache_index):
-    """q: (B,1,KV,G,D); caches: (B,Smax,KV,D); attends to positions <= index.
+def gather_pages(pool, page_table):
+    """Resolve a page pool into per-slot logical KV rows.
+
+    pool: (P, page, KV, D) physical pages; page_table: (B, M) int32 page ids
+    in logical order.  Returns (B, M*page, KV, D) where row ``pos`` of slot
+    ``b`` is ``pool[page_table[b, pos // page], pos % page]``.
+
+    Only the pool persists in HBM; the gathered view is a per-step
+    temporary — but it IS materialized at dense-equivalent size for the
+    current batch, so transient decode memory grows with the (paged-enlarged)
+    concurrent batch even though pinned memory does not.  Removing the
+    transient needs a paged flash-decode kernel that walks the page table
+    block-by-block (ROADMAP: sharded serving / paged decode kernel)."""
+    b, m = page_table.shape
+    page = pool.shape[1]
+    k = jnp.take(pool, page_table, axis=0)          # (B, M, page, KV, D)
+    return k.reshape(b, m * page, *pool.shape[2:])
+
+
+def decode_attention(q, k_cache, v_cache, cache_index, page_table=None):
+    """q: (B,1,KV,G,D); attends to positions <= index.
 
     ``cache_index``: scalar or (B,) per-slot positions — each slot gets its
-    own causal mask, so a ragged batch decodes in one call."""
+    own causal mask, so a ragged batch decodes in one call.
+
+    caches: (B,Smax,KV,D) contiguous rows, or — when ``page_table`` (B, M)
+    is given — (P,page,KV,D) pools resolved per slot through the table.  The
+    gathered view preserves logical row order, so the masked softmax below is
+    identical math to the contiguous path (bit-for-bit when M*page == Smax).
+    """
     hd = q.shape[-1]
     pos = decode_positions(cache_index, q.shape[0])
+    if page_table is not None:
+        k_cache = gather_pages(k_cache, page_table)
+        v_cache = gather_pages(v_cache, page_table)
     s = jnp.einsum("bqkgd,bskd->bkgqs", q, k_cache).astype(jnp.float32)
     s = s / math.sqrt(hd)
     valid = jnp.arange(k_cache.shape[1])[None, :] <= pos[:, None]  # (B,Smax)
@@ -293,16 +330,41 @@ def _scatter_decode_kv(cache, new, positions):
         c, n, i, axis=0))(cache, new.astype(cache.dtype), positions)
 
 
+def _scatter_paged_kv(pool, new, page_table, positions):
+    """Paged cache write: pool (P,page,KV,D) <- new (B,1,KV,D), slot b's
+    token landing at ``pool[page_table[b, pos//page], pos % page]``.  One flat
+    scatter for the whole ragged batch.  Freed slots' table rows point at the
+    scratch page (physical page 0), so their masked writes never touch pages
+    owned by live requests."""
+    p_pages, page = pool.shape[:2]
+    flat = pool.reshape(p_pages * page, *pool.shape[2:])
+    page_ids = jnp.take_along_axis(
+        page_table, (positions // page)[:, None], axis=1)[:, 0]
+    idx = page_ids * page + positions % page
+    flat = flat.at[idx].set(new[:, 0].astype(pool.dtype))
+    return flat.reshape(pool.shape)
+
+
 def attention_decode_block(p, cfg, x, k_cache, v_cache, cache_index,
-                           rope: bool = True):
-    """One-token decode.  x: (B,1,d); caches (B,Smax,KV,D).  ``cache_index``
-    is a scalar (synchronized batch) or a (B,) vector of per-slot positions
-    (ragged continuous batching: per-slot RoPE, scatter-write, and causal
-    mask).  Returns (y, new_k_cache, new_v_cache)."""
+                           rope: bool = True, page_table=None):
+    """One-token decode.  x: (B,1,d).  ``cache_index`` is a scalar
+    (synchronized batch) or a (B,) vector of per-slot positions (ragged
+    continuous batching: per-slot RoPE, scatter-write, and causal mask).
+
+    caches are (B,Smax,KV,D) contiguous rows, or — with ``page_table``
+    (B, M) — (P,page,KV,D) physical pools indexed through the table (the
+    paged backend of ``repro.serve.kvcache``).  Returns
+    (y, new_k_cache, new_v_cache)."""
     b = x.shape[0]
     per_slot = jnp.ndim(cache_index) > 0
     pos = decode_positions(cache_index, b)
     q, k, v = project_qkv(p, cfg, x, x, pos[:, None], pos[:, None], rope=rope)
+    if page_table is not None:
+        k_cache = _scatter_paged_kv(k_cache, k, page_table, pos)
+        v_cache = _scatter_paged_kv(v_cache, v, page_table, pos)
+        y = decode_attention(q, k_cache, v_cache, pos, page_table=page_table)
+        y = constrain(y, ("batch", None, None, None, None))
+        return output_proj(p, cfg, y), k_cache, v_cache
     # Pin the cache sharding (batch over DP, sequence over the model axis —
     # flash-decoding style).  Without this GSPMD may back-propagate the
     # attention head sharding onto the cache and materialize a full-cache

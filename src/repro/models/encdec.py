@@ -124,7 +124,13 @@ def decode_step(params, cfg, tokens, cache, cache_index,
                 scan_layers: bool = True):
     """One-token decoder step.  ``cache_index``: scalar or (B,) per-slot
     positions (ragged batching) — cross-attention KV is position-free, the
-    self-attention cache is scatter-written per slot."""
+    self-attention cache is scatter-written per slot.
+
+    Only the contiguous cache layout applies here: the cross-attention K/V
+    block is dense per-request state with no page structure, so the paged
+    backend of ``repro.serve.kvcache`` rejects encdec configs up front."""
+    assert "page_table" not in cache, \
+        "paged KV decode is decoder-only transformer families"
     dtype = jnp.dtype(cfg.dtype)
     h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dtype)
 

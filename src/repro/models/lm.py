@@ -74,7 +74,24 @@ class LM:
                                        cache_index, scan_layers=scan_layers)
 
     def init_cache(self, batch_size: int, max_seq: int, enc_len: int = 0,
-                   dtype=jnp.bfloat16, abstract: bool = False):
+                   dtype=jnp.bfloat16, abstract: bool = False,
+                   backend: Optional[str] = None, page_size: int = 16,
+                   num_pages: Optional[int] = None,
+                   prefix_sharing: bool = True):
+        """Decode cache construction.
+
+        ``backend=None`` (train / dry-run) returns the raw dense pytree —
+        the contiguous layout, consumed directly by ``decode_step`` and the
+        dry-run input specs.  ``backend="contiguous"`` / ``"paged"`` returns
+        a managed ``repro.serve.kvcache`` backend (alloc / free / page-table
+        indirection / prefix sharing) for the serve engine."""
+        if backend is not None:
+            assert not abstract, "managed cache backends are concrete-only"
+            from repro.serve.kvcache import make_cache
+            return make_cache(self, batch_size, max_seq, dtype=dtype,
+                              backend=backend, page_size=page_size,
+                              num_pages=num_pages,
+                              prefix_sharing=prefix_sharing)
         if self.is_encdec:
             return encdec.init_cache(self.cfg, batch_size, max_seq,
                                      enc_len or max_seq // self.cfg.enc_ratio,

@@ -385,8 +385,21 @@ def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
     per-slot position vector — the ragged continuous-batching path, where
     every slot scatter-writes and masks at its own position in one call.
     Recurrent families (ssm / hybrid mixer state) are position-free; only
-    their attention sub-blocks consume the index."""
+    their attention sub-blocks consume the index.
+
+    ``cache`` is either the dense pytree from ``init_cache`` (per-layer
+    (B,Smax,KV,D) rows) or a paged state — per-layer (P,page,KV,D) physical
+    pools plus a ``page_table`` (B, M) int32 entry (built by
+    ``repro.serve.kvcache.PagedCache``); attention then scatter-writes and
+    gathers through the page-table indirection.  The returned pytree keeps
+    the same structure (the page table passes through unchanged — it is
+    host-managed)."""
     del img_embeds  # image tokens only participate via the prefill cache
+    page_table = cache.get("page_table") if isinstance(cache, dict) else None
+    if page_table is not None:
+        assert cfg.family in ("dense", "vlm", "moe"), (
+            "paged KV decode is attention-cache families only; recurrent "
+            f"state has no page structure (family={cfg.family})")
     dtype = jnp.dtype(cfg.dtype)
     h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dtype)
     h = constrain(h, ("batch", None, "embed"))
@@ -405,7 +418,7 @@ def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
             a_in = apply_norm(lp["ln1"], h, cfg)
             a, nk, nv = attn.attention_decode_block(
                 lp["attn"], cfg, a_in, layer_cache["k"], layer_cache["v"],
-                cache_index)
+                cache_index, page_table=page_table)
             h = h + a
             f_in = apply_norm(lp["ln2"], h, cfg)
             if "moe" in lp:
@@ -484,6 +497,8 @@ def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
             body, h, (params["layers"], cache["layers"], idxs),
             cfg.num_layers, scan_layers)
         new_cache = {"layers": new_layers}
+    if page_table is not None:
+        new_cache["page_table"] = page_table   # host-managed, pass-through
 
     logits = unembed(params, cfg, h)
     return logits, new_cache

@@ -1,30 +1,48 @@
-"""Ragged continuous batching: one fused decode+sample dispatch per iteration.
+"""Ragged continuous batching over a pluggable KV cache: one fused
+decode+sample dispatch per iteration.
 
 watsonx.ai-style inference — the paper's clusters are "constantly moved
-between training and inferencing", so the same model stack must serve, and
-per-step overheads must stay in the <5% regime of Figs 5/6/8.  Design:
+between training and inferencing", so the same model stack must serve inside
+whatever HBM training leaves, and per-step overheads must stay in the <5%
+regime of Figs 5/6/8.  Design:
 
 * **B fixed cache slots**, each holding one in-flight request at its own
   depth.  ``decode_step`` takes a per-slot position vector ``(B,)`` (per-slot
   RoPE, scatter-writes, causal masks), so an arbitrarily ragged batch costs
-  exactly **one jitted device call per engine iteration**.  (The seed engine
-  grouped slots by position and paid one dispatch per *distinct position* —
-  worst case batch-1 decode.)
-* **Batched prefill**: an admitted prompt is written into its slot's cache by
-  a single ``lm.forward(collect_cache=True)`` call whose K/V block is
-  scatter-copied into the engine cache on device; prompt lengths are bucketed
-  to powers of two to bound retracing.  (The seed prefilled token-by-token
-  through the full-batch decode step.)
+  exactly **one jitted device call per engine iteration**.
+* **Pluggable KV cache** (``repro.serve.kvcache``): the engine talks to a
+  backend through ``alloc`` / ``decode_view`` / ``free`` / ``memory_stats``.
+  ``PagedCache`` (the default) reserves only the pages a request actually
+  needs — ``ceil((prompt + max_new_tokens) / page)`` — behind a (B, M) page
+  table that rides into the fused dispatch as one more int32 input, with
+  hash-based prefix sharing so identical prompt prefixes pin physical pages
+  once.  When the page pool is exhausted, **admission is deferred** (the
+  request stays queued) instead of the engine OOMing.  ``ContiguousCache``
+  is the seed dense layout behind the same API.
+* **Batched bucketed prefill**: admitted prompts are grouped by power-of-two
+  length bucket and each group runs as a *single* ``lm.forward`` call whose
+  K/V block is scatter-written into every admitted slot's cache rows/pages
+  in the same device call (one dispatch per group, not per request).
 * **On-device sampling**: greedy / temperature / top-k / top-p run as a
   vectorized kernel (``repro.serve.sampling``) fused into the decode
   dispatch.  The only host transfer per iteration is the (B,) vector of
-  sampled token ids; free slots are masked inert via ``active_mask``.
+  sampled token ids.
+* **Scratch-routed inactive writes**: masked (free) slots still participate
+  in the fused scatter, but their write position is routed to a scratch
+  location — row 0 of their own slot (contiguous: always rewritten by the
+  next prefill before it can be attended) or the scratch page (paged: a
+  freed slot's page-table row points at physical page 0), so a freed slot
+  can never deposit stale-position K/V into pages that have since been
+  reallocated to another request.
 
-Finished slots (EOS or max_len) are freed and refilled from the queue — the
-'continuous batching' part.  Dispatch accounting is exported through the
-metrics registry (``serve_decode_dispatches_total`` /
-``serve_iterations_total`` / ``serve_prefill_dispatches_total``) so the
-one-call-per-iteration invariant is observable, not asserted.
+Finished slots (EOS or max_len) free their cache reservation and are
+refilled from the queue — the 'continuous batching' part.  Dispatch and
+memory accounting are exported through the metrics registry
+(``serve_decode_dispatches_total`` / ``serve_iterations_total`` /
+``serve_prefill_dispatches_total`` / ``serve_prefill_batch_size`` /
+``serve_kv_pages_in_use`` / ``serve_kv_bytes_reserved``) so the
+one-call-per-iteration and paged-memory invariants are observable, not
+asserted.
 """
 from __future__ import annotations
 
@@ -99,7 +117,10 @@ class ServeEngine:
                  opts: ForwardOpts = ForwardOpts(attn_impl="dense",
                                                  remat="none"),
                  registry: Optional[MetricsRegistry] = None,
-                 greedy: bool = True):
+                 greedy: bool = True,
+                 cache_backend: str = "paged", page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 prefix_sharing: bool = True):
         # per-slot positions rely on masked-then-overwritten cache writes,
         # which holds for attention KV caches but not recurrent state
         assert lm.cfg.family in ("dense", "moe", "vlm"), (
@@ -116,7 +137,10 @@ class ServeEngine:
         self.img_len = (lm.cfg.num_image_tokens
                         if lm.cfg.family == "vlm" else 0)
         dt = jnp.float32 if lm.cfg.dtype == "float32" else jnp.bfloat16
-        self.cache = lm.init_cache(max_batch, max_seq, dtype=dt)
+        self.kv = lm.init_cache(max_batch, max_seq, dtype=dt,
+                                backend=cache_backend, page_size=page_size,
+                                num_pages=num_pages,
+                                prefix_sharing=prefix_sharing)
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int32)   # next write index
         self.queue: List[Request] = []
@@ -129,59 +153,64 @@ class ServeEngine:
         self.top_ks = np.zeros(max_batch, np.int32)
         self.top_ps = np.ones(max_batch, np.float32)
         self.seeds = np.zeros(max_batch, np.int32)
-        self._fused = jax.jit(self._make_fused(), static_argnums=(10,))
-        self._prefill = jax.jit(self._make_prefill())
+        # the pool/rows argument is donated so XLA can update the cache in
+        # place instead of double-buffering it per dispatch (live HBM stays
+        # ~bytes_total, not 2x).  The page table is a separate, NON-donated
+        # input: its device copy is cached across steps by PagedCache.
+        self._fused = jax.jit(self._make_fused(), static_argnums=(11,),
+                              donate_argnums=(2,))
+        self._prefill = jax.jit(self._make_prefill(), donate_argnums=(3,))
 
     # ---------------------------------------------------------- jit builds ----
     def _make_fused(self):
         """One device call: decode all B slots at their own positions, then
         sample the next token for every slot, vectorized.  Returns the (B,)
-        sampled ids (zeros on inactive slots) and the new cache.
+        sampled ids (zeros on inactive slots) and the new cache view.
 
         ``all_greedy`` is static: the common all-greedy batch compiles to a
         bare argmax, skipping the top-k/top-p sort machinery entirely (at
         most two jit cache entries)."""
         lm, vocab = self.lm, self.lm.cfg.vocab_size
 
-        def fused(params, tokens, cache, positions, active,
+        def fused(params, tokens, layers, page_table, positions, active,
                   temps, top_ks, top_ps, seeds, steps, all_greedy):
+            cache = {"layers": layers}
+            if page_table is not None:
+                cache["page_table"] = page_table
             logits, cache = lm.decode_step(params, tokens, cache, positions)
             rows = logits[:, -1, :vocab].astype(jnp.float32)
             if all_greedy:
                 tok = jnp.argmax(rows, axis=-1).astype(jnp.int32)
             else:
                 tok = sample_batch(rows, temps, top_ks, top_ps, seeds, steps)
-            return jnp.where(active, tok, 0), cache
+            return jnp.where(active, tok, 0), cache["layers"]
 
         return fused
 
     def _make_prefill(self):
-        """Whole-prompt prefill: forward with cache collection, scatter the
-        K/V block into this slot's rows of the engine cache, and sample the
-        first token on device.  jit caches one trace per prompt bucket."""
+        """Batched whole-prompt prefill: one forward with cache collection
+        for ``n`` same-bucket prompts, scatter the K/V blocks into every
+        admitted slot's storage (rows for contiguous, page-table-resolved
+        flat indices for paged), and sample each request's first token on
+        device — all in one dispatch.  jit caches one trace per
+        (group size, prompt bucket) pair."""
         lm, opts, vocab = self.lm, self.opts, self.lm.cfg.vocab_size
         has_img = self.img_len > 0
+        writer = type(self.kv).staged_write_prefill
 
-        def run(params, tokens, img_embeds, cache, slot, last_idx,
-                temp, top_k, top_p, seed):
+        def run(params, tokens, img_embeds, layers, write_spec, last_idx,
+                temps, top_ks, top_ps, seeds):
             batch = {"tokens": tokens}
             if has_img:
                 batch["img_embeds"] = img_embeds
             logits, _, pcache = lm.forward(params, batch, opts,
                                            collect_cache=True)
-
-            def write(big, small):
-                # big: (L, B, S, ...) engine cache; small: (L, 1, P, ...)
-                start = (0, slot, 0) + (0,) * (big.ndim - 3)
-                return jax.lax.dynamic_update_slice(
-                    big, small.astype(big.dtype), start)
-
-            cache = jax.tree.map(write, cache, pcache)
-            row = logits[0, last_idx, :vocab].astype(jnp.float32)
-            tok = sample_batch(row[None], temp[None], top_k[None],
-                               top_p[None], seed[None],
-                               jnp.zeros((1,), jnp.int32))
-            return tok[0], cache
+            layers = writer(layers, pcache["layers"], write_spec)
+            n = tokens.shape[0]
+            rows = logits[jnp.arange(n), last_idx, :vocab].astype(jnp.float32)
+            toks = sample_batch(rows, temps, top_ks, top_ps, seeds,
+                                jnp.zeros((n,), jnp.int32))
+            return toks, layers
 
         return run
 
@@ -195,6 +224,11 @@ class ServeEngine:
                 f"request {req.id}: prompt length {len(req.prompt)} "
                 f"(+{self.img_len} image tokens) leaves no room to decode "
                 f"in a max_seq={self.S} cache")
+        if not self.kv.can_ever_fit(self._footprint(req)):
+            raise ValueError(
+                f"request {req.id}: footprint of {self._footprint(req)} "
+                f"positions can never fit the {type(self.kv).backend} cache "
+                "pool (shrink the prompt/max_new_tokens or grow num_pages)")
         req.submitted_at = time.perf_counter()
         self.queue.append(req)
         self.reg.counter("serve_requests_total").inc()
@@ -202,42 +236,108 @@ class ServeEngine:
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
+    def _footprint(self, req: Request) -> int:
+        """Cache positions a request can ever occupy — the number ``submit``
+        validates against ``can_ever_fit`` and ``_admit`` reserves via
+        ``kv.alloc``; keeping both on this one formula is what guarantees an
+        admitted request can never stall waiting for pages that cannot
+        exist."""
+        return min(self.img_len + len(req.prompt) + req.max_new_tokens,
+                   self.S)
+
     # ------------------------------------------------------------ prefill ----
     def _admit(self):
-        """Prefill queued requests into free slots — one forward pass per
-        prompt (bucketed to powers of two), whose K/V block lands in the
-        slot's cache rows in the same device call."""
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.pop(0)
+        """Admit queued requests into free slots under admission control,
+        then prefill them — one forward dispatch per power-of-two prompt
+        bucket, each covering every same-bucket request admitted this
+        iteration.
+
+        Admission is FIFO: the head request reserves its full cache
+        footprint (prompt + max_new_tokens) via ``kv.alloc`` before its slot
+        is committed; if the page pool cannot cover it, admission stops (no
+        head-of-line skipping) and the request waits for running slots to
+        finish and free pages."""
+        free = self._free_slots()
+        admitted = []                 # (slot, req, bucket, shared_len)
+        while free and self.queue:
+            req = self.queue[0]
             plen = len(req.prompt)
-            bucket = 1 << (plen - 1).bit_length()          # next power of two
+            # image positions are embeddings, not tokens — no hash identity,
+            # so VLM requests skip prefix sharing
+            prefix = req.prompt if self.img_len == 0 else None
+            shared = self.kv.alloc(free[0], self._footprint(req),
+                                   prefix=prefix)
+            if shared is None:
+                self.reg.counter("serve_admission_deferred_total").inc()
+                break
+            slot = free.pop(0)
+            self.queue.pop(0)
+            bucket = 1 << (plen - 1).bit_length()      # next power of two
             bucket = min(bucket, self.S - self.img_len)
-            tokens = np.zeros((1, bucket), np.int32)
-            tokens[0, :plen] = req.prompt
-            if self.img_len:
-                img = (req.img_embeds if req.img_embeds is not None
-                       else np.zeros((self.img_len, self.lm.cfg.d_model)))
-                img = jnp.asarray(img, self.cache["layers"]["k"].dtype)[None]
-            else:
-                img = None
+            admitted.append((slot, req, bucket, shared))
+        # group same-bucket admissions into single forward dispatches
+        for bucket in sorted({b for _, _, b, _ in admitted}):
+            self._prefill_group(
+                bucket, [a for a in admitted if a[2] == bucket])
+        if admitted:
+            self._export_memory()
+
+    def _prefill_group(self, bucket: int, group):
+        """One ``lm.forward`` dispatch for every admitted request in this
+        prompt bucket: stacked (n, bucket) tokens in, per-request first
+        tokens and the updated K/V storage out."""
+        n = len(group)
+        paged = type(self.kv).backend == "paged"
+        tokens = np.zeros((n, bucket), np.int32)
+        last_idx = np.zeros(n, np.int32)
+        temps = np.zeros(n, np.float32)
+        top_ks = np.zeros(n, np.int32)
+        top_ps = np.ones(n, np.float32)
+        seeds = np.zeros(n, np.int32)
+        imgs = np.zeros((n, self.img_len, self.lm.cfg.d_model), np.float32) \
+            if self.img_len else None
+        block_len = self.img_len + bucket
+        write_spec = (np.zeros((n, block_len), np.int32) if paged
+                      else np.zeros(n, np.int32))
+        for j, (slot, req, _, shared) in enumerate(group):
+            plen = len(req.prompt)
+            tokens[j, :plen] = req.prompt
+            last_idx[j] = self.img_len + plen - 1
             sp = req.sampling
-            tok, self.cache = self._prefill(
-                self.params, jnp.asarray(tokens), img, self.cache,
-                jnp.int32(slot), jnp.int32(self.img_len + plen - 1),
-                jnp.float32(sp.temperature), jnp.int32(sp.top_k),
-                jnp.float32(sp.top_p), jnp.int32(sp.seed))
+            temps[j], top_ks[j] = sp.temperature, sp.top_k
+            top_ps[j], seeds[j] = sp.top_p, sp.seed
+            if self.img_len and req.img_embeds is not None:
+                imgs[j] = req.img_embeds
+            if paged:
+                write_spec[j] = self.kv.prefill_dest(
+                    slot, block_len, self.img_len + plen, shared)
+            else:
+                write_spec[j] = slot
+        img = (jnp.asarray(imgs, jax.tree.leaves(self.kv.state)[0].dtype)
+               if self.img_len else None)
+        toks, new_layers = self._prefill(
+            self.params, jnp.asarray(tokens), img, self.kv.state["layers"],
+            jnp.asarray(write_spec), jnp.asarray(last_idx),
+            jnp.asarray(temps), jnp.asarray(top_ks), jnp.asarray(top_ps),
+            jnp.asarray(seeds))
+        self.kv.update({**self.kv.state, "layers": new_layers})
+        toks = np.asarray(toks)
+        for j, (slot, req, _, _) in enumerate(group):
+            sp = req.sampling
             self.slot_req[slot] = req
-            self.slot_pos[slot] = self.img_len + plen
-            self.next_token[slot] = int(tok)
+            self.slot_pos[slot] = self.img_len + len(req.prompt)
+            self.next_token[slot] = int(toks[j])
             self.active[slot] = True
             self.temps[slot] = sp.temperature
             self.top_ks[slot] = sp.top_k
             self.top_ps[slot] = sp.top_p
             self.seeds[slot] = sp.seed
-            self.reg.counter("serve_prefill_dispatches_total").inc()
-            self.reg.counter("serve_prefill_tokens_total").inc(plen)
+            self.reg.counter("serve_prefill_tokens_total").inc(
+                len(req.prompt))
+        self.reg.counter("serve_prefill_dispatches_total").inc()
+        self.reg.histogram("serve_prefill_batch_size",
+                           buckets=(1, 2, 4, 8, 16, 32, 64, float("inf"))
+                           ).observe(n)
 
     # ------------------------------------------------------------- decode ----
     def step(self):
@@ -253,18 +353,26 @@ class ServeEngine:
         steps = np.zeros(self.B, np.int32)
         for i in active_idx:
             steps[i] = len(self.slot_req[i].out_tokens) + 1
-        positions = np.minimum(self.slot_pos, self.S - 1)
+        # inactive slots decode at scratch position 0: their masked scatter
+        # lands in storage the next prefill rewrites (contiguous row 0) or
+        # in the scratch page (paged), never in live data
+        positions = np.where(self.active,
+                             np.minimum(self.slot_pos, self.S - 1), 0)
         all_greedy = bool(np.all(self.temps[self.active] <= 0.0))
-        sampled, self.cache = self._fused(
-            self.params, jnp.asarray(self.next_token[:, None]), self.cache,
+        view = self.kv.decode_view()
+        sampled, new_layers = self._fused(
+            self.params, jnp.asarray(self.next_token[:, None]),
+            view["layers"], view.get("page_table"),
             jnp.asarray(positions), jnp.asarray(self.active),
             jnp.asarray(self.temps), jnp.asarray(self.top_ks),
             jnp.asarray(self.top_ps), jnp.asarray(self.seeds),
             jnp.asarray(steps), all_greedy)
+        self.kv.update({**view, "layers": new_layers})
         self.reg.counter("serve_decode_dispatches_total").inc()
         self.reg.counter("serve_iterations_total").inc()
         sampled = np.asarray(sampled)     # the one (B,) host transfer
         now = time.perf_counter()
+        freed = False
         for i in active_idx:
             req = self.slot_req[i]
             tok = int(self.next_token[i])
@@ -286,9 +394,19 @@ class ServeEngine:
                 self.finished.append(req)
                 self.slot_req[i] = None
                 self.active[i] = False
+                self.kv.free(i)
+                freed = True
             else:
                 self.next_token[i] = sampled[i]
+        if freed:
+            self._export_memory()
         return True
+
+    def _export_memory(self):
+        st = self.kv.memory_stats()
+        self.reg.gauge("serve_kv_pages_in_use").set(st.pages_in_use)
+        self.reg.gauge("serve_kv_bytes_reserved").set(st.bytes_reserved)
+        self.reg.gauge("serve_kv_pages_shared").set(st.pages_shared)
 
     def run_until_drained(self, max_iters: int = 10_000) -> List[Request]:
         for _ in range(max_iters):

@@ -1,0 +1,398 @@
+"""Pluggable KV-cache backends for the serve engine.
+
+The paper's clusters are "constantly moved between training and inferencing",
+so the serving path has to live inside whatever HBM training left behind.
+The #1 waste under ragged continuous batching is the cache reservation: a
+dense cache pins ``max_seq`` rows per slot no matter how short the request.
+This module makes the cache a first-class API with two backends behind one
+small protocol (``alloc`` / ``write_prefill`` / ``decode_view`` / ``free`` /
+``memory_stats``):
+
+* ``ContiguousCache`` — today's dense (L, B, Smax, KV, D) layout.  The
+  train/dry-run layout; every slot's full capacity is reserved up front, so
+  ``alloc`` never fails and admission is bounded only by the slot count.
+* ``PagedCache`` — fixed-size pages.  Physical storage is a per-layer
+  (P, page, KV, D) pool; each slot owns a row of a (B, M) int32 **page
+  table** mapping logical page index -> physical page.  ``alloc`` reserves
+  ``ceil(total_len / page)`` pages (admission control: it returns ``None``
+  when the pool is exhausted, instead of the engine OOMing), and **prefix
+  sharing** lets identical prompt prefixes share physical pages: full prompt
+  pages are keyed by a hash of the token prefix they cover and refcounted,
+  so N requests with the same system prompt pin its pages once.
+
+Physical page 0 is the **scratch page**: never allocated, it is where freed
+slots' page-table rows point, so the fused decode's masked scatter-writes
+for inactive slots land in garbage space rather than in pages that may since
+have been reallocated to another request.
+
+Device-side state stays a plain pytree (``decode_view()``) so the engine's
+one-fused-dispatch-per-iteration invariant from PR 1 is untouched: the page
+table rides into ``lm.decode_step`` as just another (B, M) int32 argument.
+Page-table *management* (alloc / free / refcounts / hashes) is host-side
+numpy — it is O(pages) bookkeeping, never a device sync.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------- byte math ----
+
+def kv_position_bytes(cfg, dtype) -> int:
+    """Bytes of K+V cache per token position (all layers)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return 2 * cfg.num_layers * cfg.num_kv_heads * cfg.resolved_head_dim \
+        * itemsize
+
+
+def contiguous_kv_bytes(cfg, batch: int, max_seq: int, dtype) -> int:
+    """HBM pinned by a dense cache: every slot reserves max_seq positions."""
+    return batch * max_seq * kv_position_bytes(cfg, dtype)
+
+
+def page_kv_bytes(cfg, page_size: int, dtype) -> int:
+    """HBM of one physical page (all layers, K+V)."""
+    return page_size * kv_position_bytes(cfg, dtype)
+
+
+@dataclass
+class MemoryStats:
+    backend: str
+    bytes_total: int          # HBM pinned by the backend's physical storage
+    bytes_reserved: int       # portion reserved by live requests
+    slots_total: int
+    slots_in_use: int
+    page_size: int = 0        # paged only
+    pages_total: int = 0      # usable pages (excludes the scratch page)
+    pages_in_use: int = 0
+    pages_shared: int = 0     # pages with refcount > 1 (prefix sharing)
+
+
+class KVCache(Protocol):
+    """The engine-facing cache protocol.
+
+    ``alloc(slot, length, prefix=None)`` reserves capacity for ``length``
+    token positions in ``slot``; returns the number of leading positions
+    already covered by shared physical storage (0 without sharing), or
+    ``None`` if the backend cannot admit the request now (admission
+    control).  ``write_prefill(slot, kv_block)`` lands a prompt's K/V block
+    in the slot's storage.  ``decode_view()`` is the device pytree handed to
+    ``lm.decode_step``; ``update()`` stores the pytree a fused dispatch
+    returned.  ``free(slot)`` releases the slot's storage.
+
+    Engine-fusion surface (beyond the five core methods): ``backend`` names
+    the layout, ``state`` is the backend's persistent device pytree (with a
+    ``"layers"`` per-layer K/V entry — the engine donates exactly that
+    subtree into its jitted dispatches), ``can_ever_fit`` backs submit-time
+    rejection of requests no amount of freeing could admit, and
+    ``staged_write_prefill`` is the *pure* (jit-stageable) form of
+    ``write_prefill`` the engine traces into its one-dispatch-per-bucket
+    batched prefill — its ``write_spec`` is backend-defined ((n,) slot ids
+    for contiguous; (n, Sblk) flat pool indices from ``prefill_dest`` for
+    paged).
+    """
+
+    backend: str
+    state: dict
+
+    def alloc(self, slot: int, length: int,
+              prefix: Optional[np.ndarray] = None) -> Optional[int]: ...
+    def write_prefill(self, slot: int, kv_block) -> None: ...
+    def decode_view(self): ...
+    def update(self, new_state) -> None: ...
+    def free(self, slot: int) -> None: ...
+    def memory_stats(self) -> MemoryStats: ...
+    def can_ever_fit(self, length: int) -> bool: ...
+    @staticmethod
+    def staged_write_prefill(layers, kv_block, write_spec): ...
+
+
+# ---------------------------------------------------------- contiguous ----
+
+class ContiguousCache:
+    """Dense (B, Smax) rows per slot — the seed layout behind the new API.
+
+    ``alloc`` always succeeds (capacity is pre-reserved, which is exactly
+    the memory waste ``PagedCache`` exists to remove) and nothing is ever
+    shared, so ``memory_stats().bytes_reserved == bytes_total`` at all
+    times.
+    """
+
+    backend = "contiguous"
+
+    def __init__(self, lm, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        self.cfg = lm.cfg
+        self.B, self.S = batch, max_seq
+        self.dtype = dtype
+        self.state = lm.init_cache(batch, max_seq, dtype=dtype)
+        self._in_use = np.zeros(batch, bool)
+        self._bytes = sum(a.size * a.dtype.itemsize
+                          for a in jax.tree.leaves(self.state))
+
+    def can_ever_fit(self, length: int) -> bool:
+        return length <= self.S
+
+    def alloc(self, slot: int, length: int,
+              prefix: Optional[np.ndarray] = None) -> Optional[int]:
+        assert not self._in_use[slot], f"slot {slot} already allocated"
+        assert 0 < length <= self.S, (length, self.S)
+        self._in_use[slot] = True
+        return 0
+
+    @staticmethod
+    def staged_write_prefill(layers, kv_block, slots):
+        """Jit-stageable multi-slot prefill write over the per-layer K/V
+        subtree (``state["layers"]``).
+
+        kv_block: per-layer (L, n, Sblk, ...) K/V for ``n`` admitted
+        requests; slots: (n,) int32 target slots.  Rows [0, Sblk) of each
+        slot are overwritten — including any prompt padding, which stays
+        invisible behind the decode causal mask until decode rewrites it.
+        """
+        def write(big, small):
+            # big: (L, B, S, ...); small: (L, n, Sblk, ...)
+            rows = jnp.arange(small.shape[2])
+            return big.at[:, slots[:, None], rows[None, :]].set(
+                small.astype(big.dtype))
+
+        return jax.tree.map(write, layers, kv_block)
+
+    def write_prefill(self, slot: int, kv_block) -> None:
+        self.state = {**self.state, "layers": self.staged_write_prefill(
+            self.state["layers"], kv_block, jnp.asarray([slot], jnp.int32))}
+
+    def decode_view(self):
+        return self.state
+
+    def update(self, new_state) -> None:
+        self.state = new_state
+
+    def free(self, slot: int) -> None:
+        self._in_use[slot] = False
+
+    def memory_stats(self) -> MemoryStats:
+        return MemoryStats(backend=self.backend, bytes_total=self._bytes,
+                           bytes_reserved=self._bytes, slots_total=self.B,
+                           slots_in_use=int(self._in_use.sum()))
+
+
+# --------------------------------------------------------------- paged ----
+
+class PagedCache:
+    """Fixed-size pages + (B, M) page-table indirection + prefix sharing.
+
+    Pool: per-layer (L, P, page, KV, D) for K and V; page 0 is scratch.
+    ``alloc`` reserves the request's full footprint up front
+    (prompt + max_new_tokens), so a decode can never run out of pages
+    mid-flight — exhaustion surfaces only as admission control.
+
+    Prefix sharing: full prompt pages (positions [i*page, (i+1)*page) wholly
+    inside the prompt) are keyed by the token prefix they causally depend on
+    — K/V at position p is a function of tokens[:p+1] only — and refcounted.
+    A later request whose prompt starts with the same tokens maps its page
+    table at those logical pages to the same physical pages and skips
+    writing them (its prefill scatter routes those positions to scratch).
+    The first page *not* fully covered by the prompt is always privately
+    owned, so decode scatter-writes never touch shared storage.
+    """
+
+    backend = "paged"
+
+    def __init__(self, lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 prefix_sharing: bool = True):
+        cfg = lm.cfg
+        assert cfg.family in ("dense", "vlm", "moe"), (
+            "paged KV is attention-cache families only "
+            f"(family={cfg.family})")
+        self.cfg, self.B, self.S = cfg, batch, max_seq
+        self.page = page_size
+        self.max_pages = -(-max_seq // page_size)              # M, per slot
+        if num_pages is None:
+            # default pool: full dense-equivalent capacity (+ scratch), so
+            # swapping backends never changes admission behaviour
+            num_pages = batch * self.max_pages + 1
+        assert num_pages >= 2, "need at least scratch + one usable page"
+        self.P = num_pages
+        self.dtype = dtype
+        self.prefix_sharing = prefix_sharing
+        L, kvh, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+        self.state = {"layers": {
+            "k": jnp.zeros((L, num_pages, page_size, kvh, hd), dtype),
+            "v": jnp.zeros((L, num_pages, page_size, kvh, hd), dtype)}}
+        self.page_table = np.zeros((batch, self.max_pages), np.int32)
+        self._page_table_dev = None      # device copy, invalidated on mutation
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))  # pop() = 1
+        self._ref = np.zeros(num_pages, np.int32)
+        self._hash_to_page: Dict[bytes, int] = {}
+        self._page_to_hash: Dict[int, bytes] = {}
+        self._slot_pages: List[List[int]] = [[] for _ in range(batch)]
+        self._slot_shared: List[int] = [0] * batch   # leading shared pages
+
+    # ------------------------------------------------------------ sizing ----
+    def pages_needed(self, length: int) -> int:
+        return -(-length // self.page)
+
+    def can_ever_fit(self, length: int) -> bool:
+        return (length <= self.S
+                and self.pages_needed(length) <= self.P - 1)
+
+    # ------------------------------------------------------------- alloc ----
+    def alloc(self, slot: int, length: int,
+              prefix: Optional[np.ndarray] = None) -> Optional[int]:
+        """Reserve pages covering ``length`` positions for ``slot``.
+
+        ``prefix``: the slot's prompt tokens starting at position 0 — the
+        key for prefix sharing (pass ``None`` to disable for this request,
+        e.g. VLM prompts whose leading positions are image embeddings).
+        Returns the number of leading positions backed by shared pages, or
+        ``None`` when the free pool cannot cover the unshared remainder.
+        """
+        assert not self._slot_pages[slot], f"slot {slot} already allocated"
+        assert 0 < length <= self.S, (length, self.S)
+        n_pages = self.pages_needed(length)
+        shared: List[int] = []
+        full = 0
+        if self.prefix_sharing and prefix is not None:
+            # only pages wholly covered by the prompt are shareable: the
+            # page containing the first decode write must be private
+            full = min(len(prefix) // self.page, n_pages)
+            for i in range(full):
+                pid = self._hash_to_page.get(self._key(prefix, i))
+                if pid is None:
+                    break
+                shared.append(pid)
+        if n_pages - len(shared) > len(self._free):
+            return None                      # admission control, not OOM
+        for pid in shared:
+            self._ref[pid] += 1
+        fresh = [self._free.pop() for _ in range(n_pages - len(shared))]
+        for pid in fresh:
+            self._ref[pid] = 1
+        pages = shared + fresh
+        # register this request's *new* full prompt pages so later identical
+        # prefixes can share them (content lands in the same _admit step)
+        if self.prefix_sharing and prefix is not None:
+            for i in range(len(shared), full):
+                key = self._key(prefix, i)
+                if key not in self._hash_to_page:
+                    self._hash_to_page[key] = pages[i]
+                    self._page_to_hash[pages[i]] = key
+        self.page_table[slot, :] = 0
+        self.page_table[slot, :n_pages] = pages
+        self._page_table_dev = None
+        self._slot_pages[slot] = pages
+        self._slot_shared[slot] = len(shared)
+        return len(shared) * self.page
+
+    def _key(self, prefix: np.ndarray, page_idx: int) -> bytes:
+        # K/V in page i depend on tokens[: (i+1)*page] (causality), nothing
+        # else — so the prefix bytes are the complete sharing key
+        return np.ascontiguousarray(
+            prefix[: (page_idx + 1) * self.page], np.int32).tobytes()
+
+    # ----------------------------------------------------------- prefill ----
+    def prefill_dest(self, slot: int, block_len: int, valid_len: int,
+                     shared_len: int = 0) -> np.ndarray:
+        """Flat pool indices for a prefill block's positions [0, block_len).
+
+        Positions already backed by shared pages, and padding positions
+        beyond ``valid_len``, route to flat index 0 (scratch page row 0) —
+        the block is computed for the padded bucket but only privately-owned
+        real positions land in the pool.
+        """
+        pos = np.arange(block_len)
+        logical = np.minimum(pos // self.page, self.max_pages - 1)
+        idx = self.page_table[slot, logical] * self.page + pos % self.page
+        write = (pos >= shared_len) & (pos < valid_len)
+        return np.where(write, idx, 0).astype(np.int32)
+
+    @staticmethod
+    def staged_write_prefill(layers, kv_block, dest):
+        """Jit-stageable multi-request prefill scatter over the per-layer
+        K/V pools (``state["layers"]``).
+
+        kv_block: per-layer (L, n, Sblk, ...) K/V; dest: (n, Sblk) flat pool
+        indices (page * page_size + row, scratch-routed where masked).
+        """
+        def write(pool, small):
+            p, pg = pool.shape[1], pool.shape[2]
+            flat = pool.reshape(pool.shape[0], p * pg, *pool.shape[3:])
+            flat = flat.at[:, dest].set(small.astype(pool.dtype))
+            return flat.reshape(pool.shape)
+
+        return jax.tree.map(write, layers, kv_block)
+
+    def write_prefill(self, slot: int, kv_block) -> None:
+        block_len = jax.tree.leaves(kv_block)[0].shape[2]
+        dest = self.prefill_dest(slot, block_len, block_len,
+                                 self._slot_shared[slot] * self.page)
+        self.state = {"layers": self.staged_write_prefill(
+            self.state["layers"], kv_block, jnp.asarray(dest[None],
+                                                        jnp.int32))}
+
+    # ------------------------------------------------------------ decode ----
+    def decode_view(self):
+        """Device pytree for ``lm.decode_step``: pools + the page table.
+
+        The table is a plain (B, M) int32 input to the fused dispatch — its
+        shape never changes, so admits/frees never retrace the decode; and
+        its device copy is cached between mutations, so steady-state decode
+        (no admits, no completions) pays no host->device transfer for it."""
+        if self._page_table_dev is None:
+            self._page_table_dev = jnp.asarray(self.page_table)
+        return {**self.state, "page_table": self._page_table_dev}
+
+    def update(self, new_state) -> None:
+        self.state = {"layers": new_state["layers"]}
+
+    # -------------------------------------------------------------- free ----
+    def free(self, slot: int) -> None:
+        for pid in self._slot_pages[slot]:
+            self._ref[pid] -= 1
+            if self._ref[pid] == 0:
+                key = self._page_to_hash.pop(pid, None)
+                if key is not None:
+                    del self._hash_to_page[key]
+                self._free.append(pid)
+        self._slot_pages[slot] = []
+        self._slot_shared[slot] = 0
+        self.page_table[slot, :] = 0    # point the freed slot at scratch
+        self._page_table_dev = None
+
+    # ------------------------------------------------------------- stats ----
+    def memory_stats(self) -> MemoryStats:
+        pb = page_kv_bytes(self.cfg, self.page, self.dtype)
+        usable = self.P - 1
+        in_use = usable - len(self._free)
+        return MemoryStats(
+            backend=self.backend, bytes_total=self.P * pb,
+            bytes_reserved=in_use * pb, slots_total=self.B,
+            slots_in_use=sum(bool(p) for p in self._slot_pages),
+            page_size=self.page, pages_total=usable, pages_in_use=in_use,
+            pages_shared=int((self._ref > 1).sum()))
+
+
+# ------------------------------------------------------------- factory ----
+
+def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
+               backend: str = "contiguous", page_size: int = 16,
+               num_pages: Optional[int] = None, prefix_sharing: bool = True):
+    """Build a KV-cache backend for ``lm`` (the ``lm.init_cache(backend=...)``
+    entry point)."""
+    if backend == "contiguous":
+        return ContiguousCache(lm, batch, max_seq, dtype=dtype)
+    if backend == "paged":
+        if lm.is_encdec:
+            raise NotImplementedError(
+                "paged KV covers decoder self-attention caches; encdec "
+                "cross-attention K/V is per-request dense state")
+        return PagedCache(lm, batch, max_seq, dtype=dtype,
+                          page_size=page_size, num_pages=num_pages,
+                          prefix_sharing=prefix_sharing)
+    raise ValueError(f"unknown KV-cache backend {backend!r}")
