@@ -6,7 +6,7 @@
 
 PY ?= python
 
-.PHONY: test smoke bench bench-serve dev-deps
+.PHONY: test smoke bench bench-serve bench-decode dev-deps
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -23,6 +23,13 @@ bench:
 bench-serve:
 	PYTHONPATH=src:. $(PY) -c "from benchmarks import bench_serving; \
 	[print(f'{n},{u:.1f},{d}') for n, u, d in bench_serving.run()]"
+
+# paged-decode microbenchmark: gather-vs-kernel per-step transient bytes and
+# fused decode latency at several (batch, pages-per-slot) points; JSON lands
+# in benchmarks/out/decode_transient.json (kernel runs interpret-mode on CPU)
+bench-decode:
+	PYTHONPATH=src:. $(PY) -c "from benchmarks import bench_serving; \
+	[print(f'{n},{u:.1f},{d}') for n, u, d in bench_serving.run_decode()]"
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

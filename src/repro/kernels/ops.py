@@ -36,6 +36,23 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
     return o.reshape(b, kv, g, s, d).transpose(0, 3, 1, 2, 4)
 
 
+@jax.jit
+def paged_decode_attention(q, k_pool, v_pool, page_table, positions):
+    """Model-layout wrapper for the page-table-walking flash-decode kernel.
+
+    q: (B, 1, KV, G, D) — one query token per slot; k/v pools:
+    (P, page, KV, D); page_table: (B, M) int32; positions: (B,) int32.
+    Returns (B, 1, KV, G, D).  No gathered dense KV view is materialized:
+    each (slot, kv-head) program streams one physical page at a time
+    (``repro.kernels.paged_decode``)."""
+    from repro.kernels import paged_decode as _pd
+    b, s, kv, g, d = q.shape
+    assert s == 1, q.shape
+    o = _pd.paged_flash_decode(q[:, 0], k_pool, v_pool, page_table,
+                               positions, interpret=_interpret())
+    return o[:, None]
+
+
 @partial(jax.jit, static_argnames=("eps", "block_rows"))
 def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int = 128):
     """x: (..., d)."""

@@ -1,0 +1,140 @@
+"""Paged flash-decode Pallas TPU kernel: page-table-walking attention.
+
+The XLA paged decode (``repro.models.attention.gather_pages``) resolves the
+page table by materializing a dense-equivalent ``(B, M*page, KV, D)`` K and V
+view every step — a transient that scales with the paged-enlarged concurrent
+batch even though *pinned* pool bytes do not, which is exactly the
+memory-movement waste the serving story is trying to kill.  This kernel walks
+the indirection instead of materializing it:
+
+* Grid ``(B, KV, M)`` with the logical-page dimension innermost — TPU grids
+  iterate the trailing dim sequentially, so each (slot, kv-head) program
+  streams its slot's pages one block at a time while the online-softmax
+  running state (m, l, acc) lives in VMEM scratch across page steps.
+* The **page table walk happens in the BlockSpec index maps** via scalar
+  prefetch (``PrefetchScalarGridSpec``): the (B, M) table and (B,) position
+  vector are SMEM-resident before the body runs, and the K/V index map for
+  grid point (b, h, j) resolves physical page ``table[b, j]`` directly — the
+  pipeline DMAs exactly one (page, D) tile of each pool per step, so
+  per-step transient memory is O(block) = O(page·D), not O(B·M·page·D).
+* **Early exit**: pages wholly past the slot's position carry no live rows.
+  Their index map redirects to physical page 0 (the pool's scratch page) —
+  consecutive grid steps with an unchanged block index elide the DMA — and
+  ``pl.when`` skips their compute entirely, so a slot at position p pays for
+  ``ceil((p+1)/page)`` pages regardless of its table width M.
+* The masked-softmax math matches ``decode_attention``'s reference: scores
+  are fp32, rows past the slot's position are masked to NEG_INF *before* the
+  running max (positions <= pos are always live, so the max never sees only
+  masked rows), and the final normalization divides once at the last page.
+
+Layouts (model code adapts via ``repro.kernels.ops.paged_decode_attention``):
+  q:          (B, KV, G, D)   one query token per slot, grouped GQA
+  k/v pools:  (P, page, KV, D) physical pages; page 0 is the scratch page
+  page_table: (B, M) int32    logical -> physical page ids
+  positions:  (B,) int32      per-slot decode position (the row just written)
+  out:        (B, KV, G, D)
+
+Occupancy/shape assumptions (documented in ROADMAP): one program per
+(slot, kv-head) — B·KV programs — and the KV block equals one physical page,
+so TPU-efficient operation wants page·D tiles aligned to the (8, 128) fp32 /
+(16, 128) bf16 tiling (i.e. serve with page_size >= 8; tiny pages still run,
+they just underfill the MXU).  The page table and positions ride in SMEM:
+B·(M+1) int32 scalars per dispatch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+            acc_scr, *, scale: float, page: int, n_pages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    pos = pos_ref[b]
+
+    # early exit: a page whose first row is past the slot's position has no
+    # live rows (its DMA was already redirected to the scratch page by the
+    # index map); skip its compute entirely
+    @pl.when(j * page <= pos)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)              # (page, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        rows = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(rows <= pos, s, NEG_INF)                 # (G, page)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def paged_flash_decode(q, k_pool, v_pool, page_table, positions,
+                       interpret: bool = False):
+    """q: (B, KV, G, D); k/v pools: (P, page, KV, D); page_table: (B, M)
+    int32; positions: (B,) int32.  Returns (B, KV, G, D)."""
+    b, kv, g, d = q.shape
+    p_pages, page = k_pool.shape[:2]
+    assert k_pool.shape == v_pool.shape and k_pool.shape[2:] == (kv, d), (
+        q.shape, k_pool.shape, v_pool.shape)
+    m = page_table.shape[1]
+    assert page_table.shape == (b, m) and positions.shape == (b,), (
+        page_table.shape, positions.shape, b)
+    scale = 1.0 / math.sqrt(d)
+
+    def q_map(b_, h, j, pt, pos):
+        return (b_, h, 0, 0)
+
+    def kv_map(b_, h, j, pt, pos):
+        # the page-table walk: dead pages (past the slot's position) resolve
+        # to the scratch page so repeated dead steps elide their DMA
+        return (jnp.where(j * page <= pos[b_], pt[b_, j], 0), 0, h, 0)
+
+    kernel = functools.partial(_kernel, scale=scale, page=page, n_pages=m)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kv, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), q_map),
+            pl.BlockSpec((1, page, 1, d), kv_map),
+            pl.BlockSpec((1, page, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),       # running max
+            pltpu.VMEM((g,), jnp.float32),       # running sum
+            pltpu.VMEM((g, d), jnp.float32),     # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), positions.astype(jnp.int32),
+      q, k_pool, v_pool)

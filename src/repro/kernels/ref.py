@@ -24,6 +24,26 @@ def flash_attention_ref(q, k, v, *, causal: bool = True):
     return jnp.einsum("bqk,bkd->bqd", p, vr.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_decode_ref(q, k_pool, v_pool, page_table, positions):
+    """Paged single-token decode attention by dense gather — the masked
+    softmax the flash kernel must reproduce.  q: (B, KV, G, D); pools:
+    (P, page, KV, D); page_table: (B, M); positions: (B,).  The gathered
+    (B, M*page, KV, D) view is exactly the transient the kernel exists to
+    avoid; here it *is* the spec."""
+    b, kv, g, d = q.shape
+    page = k_pool.shape[1]
+    m = page_table.shape[1]
+    kg = jnp.take(k_pool, page_table, axis=0).reshape(b, m * page, kv, d)
+    vg = jnp.take(v_pool, page_table, axis=0).reshape(b, m * page, kv, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32),
+                   kg.astype(jnp.float32)) / (d ** 0.5)
+    valid = jnp.arange(m * page)[None, :] <= positions[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bskd->bkgd", p,
+                      vg.astype(jnp.float32)).astype(q.dtype)
+
+
 def rmsnorm_ref(x, scale, *, eps: float = 1e-5):
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)

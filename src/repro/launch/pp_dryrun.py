@@ -126,14 +126,25 @@ def main():
     # only: recurrent state has no (L, B, S, KV, D) cache to page.
     kv_proj = None
     if cfg.family in ("dense", "vlm", "moe"):
-        from repro.serve.kvcache import contiguous_kv_bytes, page_kv_bytes
+        from repro.serve.kvcache import (contiguous_kv_bytes,
+                                         decode_transient_bytes,
+                                         page_kv_bytes)
         kv_b, kv_s, kv_page = 64, 8192, 16
+        kv_m = kv_s // kv_page
         kv_proj = {
             "batch": kv_b, "max_seq": kv_s, "page_size": kv_page,
             "contiguous_bytes": contiguous_kv_bytes(cfg, kv_b, kv_s,
                                                     jnp.bfloat16),
             "bytes_per_page": page_kv_bytes(cfg, kv_page, jnp.bfloat16),
-            "pages_in_dense_equiv": kv_b * (kv_s // kv_page),
+            "pages_in_dense_equiv": kv_b * kv_m,
+            # per-decode-step transient of the paged KV *read* path (one
+            # layer): the XLA gather materializes dense-equivalent views
+            # (scales with batch x pages), the page-table-walking kernel
+            # streams one page block per (slot, kv-head) program
+            "decode_transient_gather_bytes": decode_transient_bytes(
+                cfg, kv_b, kv_m, kv_page, jnp.bfloat16, "gather"),
+            "decode_transient_kernel_bytes": decode_transient_bytes(
+                cfg, kv_b, kv_m, kv_page, jnp.bfloat16, "pallas"),
         }
     rec = {
         "arch": args.arch, "shape": f"pp_fwd_b{b}_s{s}",
@@ -163,6 +174,10 @@ def main():
               f"{kv_proj['pages_in_dense_equiv']} pages of "
               f"{kv_proj['page_size']} "
               f"({kv_proj['bytes_per_page']/1e6:.2f} MB/page)")
+        print(f"     paged decode transient/step/layer: gather "
+              f"{kv_proj['decode_transient_gather_bytes']/1e6:.1f} MB vs "
+              f"kernel {kv_proj['decode_transient_kernel_bytes']/1e3:.1f} kB "
+              f"(x{kv_proj['decode_transient_gather_bytes'] / max(kv_proj['decode_transient_kernel_bytes'], 1):.0f})")
 
 
 if __name__ == "__main__":

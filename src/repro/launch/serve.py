@@ -9,6 +9,8 @@ contiguous dense rows via ``--cache-backend contiguous``.
     python -m repro.launch.serve --arch qwen3-4b --reduced --requests 16
     python -m repro.launch.serve --cache-backend paged --page-size 8 \
         --num-pages 48   # tight pool: watch admissions defer, not OOM
+    python -m repro.launch.serve --decode-impl pallas   # page-table-walking
+        # flash-decode kernel: no gathered dense KV transient per step
 """
 from __future__ import annotations
 
@@ -42,6 +44,15 @@ def main():
                     help="physical page pool size (default: dense-equivalent"
                          " capacity); smaller pools defer admissions")
     ap.add_argument("--no-prefix-sharing", action="store_true")
+    ap.add_argument("--decode-impl", default="gather",
+                    choices=["gather", "pallas"],
+                    help="paged page-table resolution per decode step: "
+                         "'gather' (XLA fallback — materializes a "
+                         "dense-equivalent KV view, transient grows with "
+                         "batch x pages) or 'pallas' (page-table-walking "
+                         "flash-decode kernel, O(page) transient; interpret "
+                         "mode on CPU, Mosaic on TPU).  Ignored by "
+                         "--cache-backend contiguous")
     args = ap.parse_args()
 
     import dataclasses
@@ -53,7 +64,8 @@ def main():
     eng = ServeEngine(lm, params, args.max_batch, args.max_seq,
                       cache_backend=args.cache_backend,
                       page_size=args.page_size, num_pages=args.num_pages,
-                      prefix_sharing=not args.no_prefix_sharing)
+                      prefix_sharing=not args.no_prefix_sharing,
+                      decode_impl=args.decode_impl)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -86,6 +98,10 @@ def main():
              if st.backend == "paged" else "")
           + f"; admissions deferred={deferred:.0f}; "
           f"prefill batch p50={pf_h.quantile(0.5):.0f}")
+    if st.backend == "paged":
+        transient = eng.reg.gauge("serve_decode_transient_bytes").get()
+        print(f"decode impl [{eng.kv.decode_impl}]: per-step KV read "
+              f"transient {transient/1e3:.1f} kB/layer")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,12 @@ batch decodes in a single call.  Two cache layouts share the decode math:
   (``repro.serve.kvcache``).  Physical page 0 is a scratch sink: freed slots'
   table rows point at it, so masked/inactive decode writes land in garbage
   space instead of pages that may since belong to another request.
+
+Paged decode resolves the table one of two ways (``decode_impl``):
+``"gather"`` — XLA gather into a dense-equivalent per-step view (default,
+runs anywhere, O(B·M·page) transient) — or ``"pallas"`` — the
+``repro.kernels.paged_decode`` flash kernel that walks the table
+block-by-block with O(page) transient (interpret mode on CPU).
 """
 from __future__ import annotations
 
@@ -230,26 +236,39 @@ def decode_positions(cache_index, batch: int):
     return idx
 
 
-def gather_pages(pool, page_table):
+def gather_pages(pool, page_table, positions=None):
     """Resolve a page pool into per-slot logical KV rows.
 
     pool: (P, page, KV, D) physical pages; page_table: (B, M) int32 page ids
     in logical order.  Returns (B, M*page, KV, D) where row ``pos`` of slot
     ``b`` is ``pool[page_table[b, pos // page], pos % page]``.
 
+    ``positions`` (B,), when given, redirects table rows for logical pages
+    past ``ceil((pos+1)/page)`` — allocated for the request's future decode
+    but holding nothing attendable yet — to the scratch page (physical page
+    0).  Every row those pages would contribute is masked to NEG_INF by the
+    caller anyway, so logits are bitwise unchanged, but the gather's HBM
+    reads for a short sequence shrink from the slot's full reservation to
+    the pages it has actually written (repeated scratch-page reads hit the
+    same lines).
+
     Only the pool persists in HBM; the gathered view is a per-step
     temporary — but it IS materialized at dense-equivalent size for the
     current batch, so transient decode memory grows with the (paged-enlarged)
-    concurrent batch even though pinned memory does not.  Removing the
-    transient needs a paged flash-decode kernel that walks the page table
-    block-by-block (ROADMAP: sharded serving / paged decode kernel)."""
+    concurrent batch even though pinned memory does not.  The paged
+    flash-decode kernel (``decode_attention(..., impl="pallas")``) walks the
+    table block-by-block instead and never materializes this view."""
     b, m = page_table.shape
     page = pool.shape[1]
+    if positions is not None:
+        live = jnp.arange(m)[None, :] <= positions[:, None] // page  # (B, M)
+        page_table = jnp.where(live, page_table, 0)
     k = jnp.take(pool, page_table, axis=0)          # (B, M, page, KV, D)
     return k.reshape(b, m * page, *pool.shape[2:])
 
 
-def decode_attention(q, k_cache, v_cache, cache_index, page_table=None):
+def decode_attention(q, k_cache, v_cache, cache_index, page_table=None,
+                     impl: str = "gather"):
     """q: (B,1,KV,G,D); attends to positions <= index.
 
     ``cache_index``: scalar or (B,) per-slot positions — each slot gets its
@@ -259,12 +278,24 @@ def decode_attention(q, k_cache, v_cache, cache_index, page_table=None):
     is given — (P,page,KV,D) pools resolved per slot through the table.  The
     gathered view preserves logical row order, so the masked softmax below is
     identical math to the contiguous path (bit-for-bit when M*page == Smax).
+
+    ``impl`` selects the paged resolution strategy: ``"gather"`` (the XLA
+    fallback — materializes the dense-equivalent view per step) or
+    ``"pallas"`` (the ``repro.kernels.paged_decode`` flash kernel — walks
+    the page table block-by-block, O(page) transient, matching this masked
+    softmax within fp32 online-softmax tolerance).  Contiguous caches
+    ignore ``impl``.
     """
     hd = q.shape[-1]
     pos = decode_positions(cache_index, q.shape[0])
     if page_table is not None:
-        k_cache = gather_pages(k_cache, page_table)
-        v_cache = gather_pages(v_cache, page_table)
+        if impl == "pallas":
+            from repro.kernels import ops as kops
+            return kops.paged_decode_attention(q, k_cache, v_cache,
+                                               page_table, pos)
+        assert impl == "gather", impl
+        k_cache = gather_pages(k_cache, page_table, pos)
+        v_cache = gather_pages(v_cache, page_table, pos)
     s = jnp.einsum("bqkgd,bskd->bkgqs", q, k_cache).astype(jnp.float32)
     s = s / math.sqrt(hd)
     valid = jnp.arange(k_cache.shape[1])[None, :] <= pos[:, None]  # (B,Smax)
@@ -346,15 +377,17 @@ def _scatter_paged_kv(pool, new, page_table, positions):
 
 
 def attention_decode_block(p, cfg, x, k_cache, v_cache, cache_index,
-                           rope: bool = True, page_table=None):
+                           rope: bool = True, page_table=None,
+                           decode_impl: str = "gather"):
     """One-token decode.  x: (B,1,d).  ``cache_index`` is a scalar
     (synchronized batch) or a (B,) vector of per-slot positions (ragged
     continuous batching: per-slot RoPE, scatter-write, and causal mask).
 
     caches are (B,Smax,KV,D) contiguous rows, or — with ``page_table``
     (B, M) — (P,page,KV,D) physical pools indexed through the table (the
-    paged backend of ``repro.serve.kvcache``).  Returns
-    (y, new_k_cache, new_v_cache)."""
+    paged backend of ``repro.serve.kvcache``), resolved per ``decode_impl``
+    ("gather": XLA dense-equivalent view; "pallas": page-table-walking
+    flash kernel).  Returns (y, new_k_cache, new_v_cache)."""
     b = x.shape[0]
     per_slot = jnp.ndim(cache_index) > 0
     pos = decode_positions(cache_index, b)
@@ -362,7 +395,8 @@ def attention_decode_block(p, cfg, x, k_cache, v_cache, cache_index,
     if page_table is not None:
         k_cache = _scatter_paged_kv(k_cache, k, page_table, pos)
         v_cache = _scatter_paged_kv(v_cache, v, page_table, pos)
-        y = decode_attention(q, k_cache, v_cache, pos, page_table=page_table)
+        y = decode_attention(q, k_cache, v_cache, pos, page_table=page_table,
+                             impl=decode_impl)
         y = constrain(y, ("batch", None, None, None, None))
         return output_proj(p, cfg, y), k_cache, v_cache
     # Pin the cache sharding (batch over DP, sequence over the model axis —

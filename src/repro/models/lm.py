@@ -64,34 +64,42 @@ class LM:
         return logits[:, -1:, :], cache
 
     def decode_step(self, params, tokens, cache, cache_index,
-                    scan_layers: bool = True):
+                    scan_layers: bool = True, decode_impl: str = "gather"):
         """One-token decode.  ``cache_index`` is a scalar shared position or
-        a (B,) per-slot position vector (ragged continuous batching)."""
+        a (B,) per-slot position vector (ragged continuous batching).
+        ``decode_impl`` selects how a paged cache's page table is resolved
+        ("gather": XLA fallback; "pallas": page-table-walking flash-decode
+        kernel); contiguous caches ignore it."""
         if self.is_encdec:
             return encdec.decode_step(params, self.cfg, tokens, cache,
                                       cache_index, scan_layers=scan_layers)
         return transformer.decode_step(params, self.cfg, tokens, cache,
-                                       cache_index, scan_layers=scan_layers)
+                                       cache_index, scan_layers=scan_layers,
+                                       decode_impl=decode_impl)
 
     def init_cache(self, batch_size: int, max_seq: int, enc_len: int = 0,
                    dtype=jnp.bfloat16, abstract: bool = False,
                    backend: Optional[str] = None, page_size: int = 16,
                    num_pages: Optional[int] = None,
-                   prefix_sharing: bool = True):
+                   prefix_sharing: bool = True,
+                   decode_impl: str = "gather"):
         """Decode cache construction.
 
         ``backend=None`` (train / dry-run) returns the raw dense pytree —
         the contiguous layout, consumed directly by ``decode_step`` and the
         dry-run input specs.  ``backend="contiguous"`` / ``"paged"`` returns
         a managed ``repro.serve.kvcache`` backend (alloc / free / page-table
-        indirection / prefix sharing) for the serve engine."""
+        indirection / prefix sharing) for the serve engine; ``decode_impl``
+        rides on the backend and tells decode consumers how to resolve the
+        page table ("gather" / "pallas")."""
         if backend is not None:
             assert not abstract, "managed cache backends are concrete-only"
             from repro.serve.kvcache import make_cache
             return make_cache(self, batch_size, max_seq, dtype=dtype,
                               backend=backend, page_size=page_size,
                               num_pages=num_pages,
-                              prefix_sharing=prefix_sharing)
+                              prefix_sharing=prefix_sharing,
+                              decode_impl=decode_impl)
         if self.is_encdec:
             return encdec.init_cache(self.cfg, batch_size, max_seq,
                                      enc_len or max_seq // self.cfg.enc_ratio,

@@ -378,7 +378,7 @@ def _scan_or_unroll(body, init, xs, n: int, scan: bool):
 
 
 def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
-                scan_layers: bool = True):
+                scan_layers: bool = True, decode_impl: str = "gather"):
     """One-token decode.  tokens: (B, 1).  Returns (logits, new_cache).
 
     ``cache_index`` is a scalar (all sequences at the same depth) or a (B,)
@@ -391,11 +391,15 @@ def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
     (B,Smax,KV,D) rows) or a paged state — per-layer (P,page,KV,D) physical
     pools plus a ``page_table`` (B, M) int32 entry (built by
     ``repro.serve.kvcache.PagedCache``); attention then scatter-writes and
-    gathers through the page-table indirection.  The returned pytree keeps
-    the same structure (the page table passes through unchanged — it is
+    resolves reads through the page-table indirection — by XLA gather
+    (``decode_impl="gather"``, the default) or by the page-table-walking
+    Pallas flash kernel (``decode_impl="pallas"``,
+    ``repro.kernels.paged_decode``).  The returned pytree keeps the same
+    structure (the page table passes through unchanged — it is
     host-managed)."""
     del img_embeds  # image tokens only participate via the prefill cache
     page_table = cache.get("page_table") if isinstance(cache, dict) else None
+    assert decode_impl in ("gather", "pallas"), decode_impl
     if page_table is not None:
         assert cfg.family in ("dense", "vlm", "moe"), (
             "paged KV decode is attention-cache families only; recurrent "
@@ -418,7 +422,7 @@ def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
             a_in = apply_norm(lp["ln1"], h, cfg)
             a, nk, nv = attn.attention_decode_block(
                 lp["attn"], cfg, a_in, layer_cache["k"], layer_cache["v"],
-                cache_index, page_table=page_table)
+                cache_index, page_table=page_table, decode_impl=decode_impl)
             h = h + a
             f_in = apply_norm(lp["ln2"], h, cfg)
             if "moe" in lp:

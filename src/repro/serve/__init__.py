@@ -1,11 +1,12 @@
 from repro.serve.engine import Request, SamplingParams, ServeEngine, \
     sample_token
 from repro.serve.kvcache import (ContiguousCache, KVCache, MemoryStats,
-                                 PagedCache, contiguous_kv_bytes, make_cache,
+                                 PagedCache, contiguous_kv_bytes,
+                                 decode_transient_bytes, make_cache,
                                  page_kv_bytes)
 from repro.serve.sampling import filtered_probs, sample_batch
 
 __all__ = ["Request", "SamplingParams", "ServeEngine", "sample_token",
            "filtered_probs", "sample_batch", "KVCache", "ContiguousCache",
            "PagedCache", "MemoryStats", "make_cache", "contiguous_kv_bytes",
-           "page_kv_bytes"]
+           "decode_transient_bytes", "page_kv_bytes"]

@@ -18,7 +18,10 @@ regime of Figs 5/6/8.  Design:
   hash-based prefix sharing so identical prompt prefixes pin physical pages
   once.  When the page pool is exhausted, **admission is deferred** (the
   request stays queued) instead of the engine OOMing.  ``ContiguousCache``
-  is the seed dense layout behind the same API.
+  is the seed dense layout behind the same API.  ``decode_impl`` picks how
+  the paged table is resolved per step: ``"gather"`` (XLA fallback,
+  O(B·M·page) transient) or ``"pallas"`` (the page-table-walking
+  flash-decode kernel, O(page) transient — ``repro.kernels.paged_decode``).
 * **Batched bucketed prefill**: admitted prompts are grouped by power-of-two
   length bucket and each group runs as a *single* ``lm.forward`` call whose
   K/V block is scatter-written into every admitted slot's cache rows/pages
@@ -40,9 +43,9 @@ refilled from the queue — the 'continuous batching' part.  Dispatch and
 memory accounting are exported through the metrics registry
 (``serve_decode_dispatches_total`` / ``serve_iterations_total`` /
 ``serve_prefill_dispatches_total`` / ``serve_prefill_batch_size`` /
-``serve_kv_pages_in_use`` / ``serve_kv_bytes_reserved``) so the
-one-call-per-iteration and paged-memory invariants are observable, not
-asserted.
+``serve_kv_pages_in_use`` / ``serve_kv_bytes_reserved`` /
+``serve_decode_transient_bytes``) so the one-call-per-iteration and
+paged-memory invariants are observable, not asserted.
 """
 from __future__ import annotations
 
@@ -120,7 +123,8 @@ class ServeEngine:
                  greedy: bool = True,
                  cache_backend: str = "paged", page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 decode_impl: str = "gather"):
         # per-slot positions rely on masked-then-overwritten cache writes,
         # which holds for attention KV caches but not recurrent state
         assert lm.cfg.family in ("dense", "moe", "vlm"), (
@@ -140,7 +144,8 @@ class ServeEngine:
         self.kv = lm.init_cache(max_batch, max_seq, dtype=dt,
                                 backend=cache_backend, page_size=page_size,
                                 num_pages=num_pages,
-                                prefix_sharing=prefix_sharing)
+                                prefix_sharing=prefix_sharing,
+                                decode_impl=decode_impl)
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int32)   # next write index
         self.queue: List[Request] = []
@@ -171,13 +176,15 @@ class ServeEngine:
         bare argmax, skipping the top-k/top-p sort machinery entirely (at
         most two jit cache entries)."""
         lm, vocab = self.lm, self.lm.cfg.vocab_size
+        decode_impl = self.kv.decode_impl   # fixed per engine (kvcache config)
 
         def fused(params, tokens, layers, page_table, positions, active,
                   temps, top_ks, top_ps, seeds, steps, all_greedy):
             cache = {"layers": layers}
             if page_table is not None:
                 cache["page_table"] = page_table
-            logits, cache = lm.decode_step(params, tokens, cache, positions)
+            logits, cache = lm.decode_step(params, tokens, cache, positions,
+                                           decode_impl=decode_impl)
             rows = logits[:, -1, :vocab].astype(jnp.float32)
             if all_greedy:
                 tok = jnp.argmax(rows, axis=-1).astype(jnp.int32)
@@ -407,6 +414,16 @@ class ServeEngine:
         self.reg.gauge("serve_kv_pages_in_use").set(st.pages_in_use)
         self.reg.gauge("serve_kv_bytes_reserved").set(st.bytes_reserved)
         self.reg.gauge("serve_kv_pages_shared").set(st.pages_shared)
+        # per-step transient of the paged KV read path (byte math, one
+        # layer): the gather fallback scales with B·M·page, the pallas
+        # kernel with the page block only — dense rows gather nothing
+        transient = 0
+        if st.backend == "paged":
+            from repro.serve.kvcache import decode_transient_bytes
+            transient = decode_transient_bytes(
+                self.lm.cfg, self.B, self.kv.max_pages, st.page_size,
+                self.kv.dtype, self.kv.decode_impl)
+        self.reg.gauge("serve_decode_transient_bytes").set(transient)
 
     def run_until_drained(self, max_iters: int = 10_000) -> List[Request]:
         for _ in range(max_iters):

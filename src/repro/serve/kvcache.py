@@ -60,6 +60,25 @@ def page_kv_bytes(cfg, page_size: int, dtype) -> int:
     return page_size * kv_position_bytes(cfg, dtype)
 
 
+def decode_transient_bytes(cfg, batch: int, max_pages: int, page_size: int,
+                           dtype, decode_impl: str = "gather") -> int:
+    """Per-decode-step transient bytes of the paged KV *read* path, one
+    layer's worth (the layer scan reuses the buffer).
+
+    ``"gather"``: XLA materializes two dense-equivalent gathered views,
+    (B, M*page, KV, D) each — the transient grows with the paged-enlarged
+    concurrent batch.  ``"pallas"``: each (slot, kv-head) program of the
+    page-table-walking kernel streams one (page, D) K and V tile into VMEM
+    plus fp32 online-softmax state — O(page), independent of B and M."""
+    itemsize = jnp.dtype(dtype).itemsize
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if decode_impl == "gather":
+        return 2 * batch * max_pages * page_size * kvh * hd * itemsize
+    assert decode_impl == "pallas", decode_impl
+    g = cfg.num_heads // kvh
+    return 2 * page_size * hd * itemsize + 4 * g * (hd + 2)
+
+
 @dataclass
 class MemoryStats:
     backend: str
@@ -124,6 +143,7 @@ class ContiguousCache:
     """
 
     backend = "contiguous"
+    decode_impl = "gather"      # dense rows have no page table to resolve
 
     def __init__(self, lm, batch: int, max_seq: int, dtype=jnp.bfloat16):
         self.cfg = lm.cfg
@@ -205,11 +225,13 @@ class PagedCache:
 
     def __init__(self, lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True, decode_impl: str = "gather"):
         cfg = lm.cfg
         assert cfg.family in ("dense", "vlm", "moe"), (
             "paged KV is attention-cache families only "
             f"(family={cfg.family})")
+        assert decode_impl in ("gather", "pallas"), decode_impl
+        self.decode_impl = decode_impl
         self.cfg, self.B, self.S = cfg, batch, max_seq
         self.page = page_size
         self.max_pages = -(-max_seq // page_size)              # M, per slot
@@ -382,10 +404,18 @@ class PagedCache:
 
 def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
                backend: str = "contiguous", page_size: int = 16,
-               num_pages: Optional[int] = None, prefix_sharing: bool = True):
+               num_pages: Optional[int] = None, prefix_sharing: bool = True,
+               decode_impl: str = "gather"):
     """Build a KV-cache backend for ``lm`` (the ``lm.init_cache(backend=...)``
-    entry point)."""
+    entry point).  ``decode_impl`` ("gather" / "pallas") rides on the paged
+    backend and tells decode consumers how to resolve the page table; the
+    contiguous backend has no table and always reports "gather"."""
     if backend == "contiguous":
+        if decode_impl != "gather":
+            raise ValueError(
+                "decode_impl applies to the paged backend's page-table "
+                f"resolution; the contiguous layout has no table to walk "
+                f"(got decode_impl={decode_impl!r})")
         return ContiguousCache(lm, batch, max_seq, dtype=dtype)
     if backend == "paged":
         if lm.is_encdec:
@@ -394,5 +424,6 @@ def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
                 "cross-attention K/V is per-request dense state")
         return PagedCache(lm, batch, max_seq, dtype=dtype,
                           page_size=page_size, num_pages=num_pages,
-                          prefix_sharing=prefix_sharing)
+                          prefix_sharing=prefix_sharing,
+                          decode_impl=decode_impl)
     raise ValueError(f"unknown KV-cache backend {backend!r}")
