@@ -6,10 +6,25 @@
 
 PY ?= python
 
-.PHONY: test smoke bench bench-serve bench-decode dev-deps
+.PHONY: test test-multidevice test-all smoke bench bench-serve \
+	bench-decode bench-sharded dev-deps
 
+# tier-1: the fast single-process suite.  The multi-device subprocess
+# files are split into `test-multidevice` (their own CI job) so this —
+# and the `smoke` target that depends on it — stays fast; `test-all`
+# runs everything (what a bare `pytest -x -q` collects)
 test:
-	PYTHONPATH=src $(PY) -m pytest -x -q
+	PYTHONPATH=src $(PY) -m pytest -x -q \
+		--ignore=tests/test_parallel_multidevice.py \
+		--ignore=tests/test_serve_sharded.py
+
+# the subprocess-per-test multi-device suites (8 fake host devices each):
+# sharded train/pipeline semantics + sharded paged serving parity
+test-multidevice:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_parallel_multidevice.py \
+		tests/test_serve_sharded.py
+
+test-all: test test-multidevice
 
 smoke: test bench-serve
 	PYTHONPATH=src:. $(PY) -c "import benchmarks.run; print('benchmarks: import ok')"
@@ -30,6 +45,15 @@ bench-serve:
 bench-decode:
 	PYTHONPATH=src:. $(PY) -c "from benchmarks import bench_serving; \
 	[print(f'{n},{u:.1f},{d}') for n, u, d in bench_serving.run_decode()]"
+
+# sharded paged serving sweep on 8 fake host devices: the kv_pages-
+# partitioned pool at mesh 1/2/4/8 — per-chip pinned KV bytes (P/n pages,
+# analytic == measured), fused-step latency vs the 1-chip baseline, and a
+# token-stream parity assert; JSON lands in benchmarks/out/sharded_serving.json
+bench-sharded:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src:. \
+	$(PY) -c "from benchmarks import bench_serving; \
+	[print(f'{n},{u:.1f},{d}') for n, u, d in bench_serving.run_sharded()]"
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

@@ -31,6 +31,7 @@ from repro.serve import (Request, ServeEngine, contiguous_kv_bytes,
 from repro.serve.engine import sample_token
 
 OUT_JSON = Path(__file__).resolve().parent / "out" / "decode_transient.json"
+SHARDED_JSON = Path(__file__).resolve().parent / "out" / "sharded_serving.json"
 
 
 class GroupedReferenceEngine:
@@ -311,6 +312,109 @@ def run_decode():
                               dtype="float32", num_layers=2)
     lm = LM(cfg)
     return _decode_transient_sweep(lm, cfg, lm.init(jax.random.key(0)))
+
+
+def run_sharded():
+    """Sharded paged serving sweep (``make bench-sharded``, 8 fake host
+    devices): the same ragged workload served over 1/2/4/8-chip inference
+    meshes with the kv_pages-partitioned pool.
+
+    Reported per mesh width n: **pinned KV bytes per chip** — both the
+    analytic P/n page split from ``memory_stats`` and the *measured* max
+    per-device bytes of the live pool arrays (they must agree: the pool
+    shards down with the mesh instead of replicating) — plus steady-state
+    fused decode-step latency vs the 1-chip baseline and the end-to-end
+    token-stream parity assert.  JSON lands in
+    ``benchmarks/out/sharded_serving.json``.
+
+    On CPU the shard_map runs over fake host devices, so the latency column
+    is a dispatch-overhead trend (n interpreter shards + the psum merge),
+    not an ICI model; the per-chip byte accounting is exact everywhere."""
+    n_dev = len(jax.devices())
+    widths = [n for n in (1, 2, 4, 8) if n <= n_dev]
+    if widths != [1, 2, 4, 8]:
+        print(f"# bench-sharded: only {n_dev} devices visible; sweeping "
+              f"{widths} (run with XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8 for the full sweep)")
+    cfg = dataclasses.replace(CONFIGS["llama3.2-3b"].reduced(),
+                              dtype="float32", num_layers=2)
+    lm = LM(cfg)
+    params = lm.init(jax.random.key(0))
+    max_batch, max_seq, page, pool = 8, 64, 8, 64   # 64 pages: all n divide
+    n_requests, new_tokens = 12, 8
+
+    from repro.parallel.mesh import make_mesh
+
+    records, rows, base = [], [], None
+    base_streams = None
+    for n in widths:
+        mesh = make_mesh((n,), ("model",)) if n > 1 else None
+        eng = ServeEngine(lm, params, max_batch, max_seq,
+                          cache_backend="paged", page_size=page,
+                          num_pages=pool, mesh=mesh)
+        wall, toks, ttft = _drain_measured(eng, cfg, n_requests, new_tokens)
+        streams = sorted((r.id, tuple(r.out_tokens)) for r in eng.finished)
+        if base_streams is None:
+            base_streams = streams
+        else:
+            assert streams == base_streams, \
+                f"sharded stream divergence at n={n}"
+        st = eng.kv.memory_stats()
+        assert st.mesh_chips == (n if mesh is not None else 1)
+        assert st.bytes_per_chip == st.bytes_total // st.mesh_chips
+        # measured per-device bytes of the live pool (post-decode, so the
+        # steady-state sharding — not a prefill transient — is what's on
+        # each chip)
+        per_dev: Dict = {}
+        for arr in jax.tree.leaves(eng.kv.state["layers"]):
+            for s in arr.addressable_shards:
+                key = repr(s.device)
+                per_dev[key] = per_dev.get(key, 0) + s.data.nbytes
+        measured_per_chip = max(per_dev.values())
+        assert measured_per_chip == st.bytes_per_chip, (
+            measured_per_chip, st.bytes_per_chip)
+        # steady-state fused step latency: all slots mid-decode
+        view = eng.kv.decode_view()
+        args = (jnp.asarray(np.zeros((max_batch, 1), np.int32)),
+                view["layers"], view.get("page_table"),
+                jnp.asarray(np.full(max_batch, 9, np.int32)),
+                jnp.asarray(np.ones(max_batch, bool)),
+                jnp.asarray(np.zeros(max_batch, np.float32)),
+                jnp.asarray(np.zeros(max_batch, np.int32)),
+                jnp.asarray(np.ones(max_batch, np.float32)),
+                jnp.asarray(np.zeros(max_batch, np.int32)),
+                jnp.asarray(np.ones(max_batch, np.int32)), True)
+        tok, layers = eng._fused(params, *args)      # warm (donates view)
+        jax.block_until_ready(layers)
+        reps, t0 = 10, time.perf_counter()
+        for _ in range(reps):
+            tok, layers = eng._fused(params, args[0], layers, *args[2:])
+            jax.block_until_ready(layers)
+        step_us = (time.perf_counter() - t0) / reps * 1e6
+        if base is None:
+            base = step_us
+        records.append({
+            "mesh": n, "pool_pages": st.pages_total + 1, "page_size": page,
+            "pinned_bytes_total": st.bytes_total,
+            "pinned_bytes_per_chip": st.bytes_per_chip,
+            "pinned_bytes_per_chip_measured": int(measured_per_chip),
+            "fused_step_us": round(step_us, 1),
+            "tok_s": round(toks / wall, 1),
+            "ttft_p50_ms": round(ttft * 1e3, 2),
+            "stream_parity": True,
+        })
+        rows.append((
+            f"serving/sharded_step_n{n}", step_us,
+            f"{st.bytes_per_chip/1e3:.0f}kB/chip pinned "
+            f"(P/{st.mesh_chips}={((st.pages_total + 1) // st.mesh_chips)} "
+            f"pages), x{step_us/base:.2f} vs 1-chip, parity ok"))
+    # pool bytes must scale down P/n with the mesh
+    per_chip = {r["mesh"]: r["pinned_bytes_per_chip"] for r in records}
+    for n in widths[1:]:
+        assert per_chip[n] * n == per_chip[widths[0]] * widths[0], per_chip
+    SHARDED_JSON.parent.mkdir(parents=True, exist_ok=True)
+    SHARDED_JSON.write_text(json.dumps(records, indent=1))
+    return rows
 
 
 def run():

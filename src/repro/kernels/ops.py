@@ -53,6 +53,26 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, positions):
     return o[:, None]
 
 
+def paged_decode_partials(q, k_pool, v_pool, page_table, positions,
+                          page_offset):
+    """Per-chip partial paged decode for sharded serving
+    (``repro.parallel.pagedkv``): the pool argument is one chip's
+    (P/n, page, KV, D) shard, ``page_offset`` its first global page id, and
+    the page table keeps GLOBAL ids — non-local pages are skipped exactly
+    like dead pages.  q: (B, 1, KV, G, D).  Returns the raw fp32
+    online-softmax triple ``(acc (B,1,KV,G,D), l (B,KV,G), m (B,KV,G))``
+    whose cross-chip psum-style merge reconstructs the full softmax.
+    Not jitted here: it only runs inside a shard_map body that is already
+    staged by the engine's fused dispatch."""
+    from repro.kernels import paged_decode as _pd
+    b, s, kv, g, d = q.shape
+    assert s == 1, q.shape
+    acc, l, m = _pd.paged_flash_decode(q[:, 0], k_pool, v_pool, page_table,
+                                       positions, page_offset=page_offset,
+                                       partials=True, interpret=_interpret())
+    return acc[:, None], l, m
+
+
 @partial(jax.jit, static_argnames=("eps", "block_rows"))
 def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int = 128):
     """x: (..., d)."""

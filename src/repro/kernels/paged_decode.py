@@ -12,34 +12,51 @@ the indirection instead of materializing it:
   streams its slot's pages one block at a time while the online-softmax
   running state (m, l, acc) lives in VMEM scratch across page steps.
 * The **page table walk happens in the BlockSpec index maps** via scalar
-  prefetch (``PrefetchScalarGridSpec``): the (B, M) table and (B,) position
-  vector are SMEM-resident before the body runs, and the K/V index map for
-  grid point (b, h, j) resolves physical page ``table[b, j]`` directly — the
-  pipeline DMAs exactly one (page, D) tile of each pool per step, so
-  per-step transient memory is O(block) = O(page·D), not O(B·M·page·D).
-* **Early exit**: pages wholly past the slot's position carry no live rows.
-  Their index map redirects to physical page 0 (the pool's scratch page) —
-  consecutive grid steps with an unchanged block index elide the DMA — and
-  ``pl.when`` skips their compute entirely, so a slot at position p pays for
-  ``ceil((p+1)/page)`` pages regardless of its table width M.
+  prefetch (``PrefetchScalarGridSpec``): the (B, M) table, (B,) position
+  vector, and (1,) local-page offset are SMEM-resident before the body runs,
+  and the K/V index map for grid point (b, h, j) resolves physical page
+  ``table[b, j] - offset`` directly — the pipeline DMAs exactly one
+  (page, D) tile of each pool per step, so per-step transient memory is
+  O(block) = O(page·D), not O(B·M·page·D).
+* **Early exit**: pages wholly past the slot's position carry no live rows,
+  and — under sharded serving — pages outside this chip's local window
+  ``[offset, offset + P_local)`` belong to another chip's pool shard.  Both
+  kinds redirect their index map to local page 0 (consecutive grid steps
+  with an unchanged block index elide the DMA) and ``pl.when`` skips their
+  compute entirely, so a slot at position p pays for the live pages *this
+  chip owns*, regardless of its table width M.
 * The masked-softmax math matches ``decode_attention``'s reference: scores
   are fp32, rows past the slot's position are masked to NEG_INF *before* the
-  running max (positions <= pos are always live, so the max never sees only
-  masked rows), and the final normalization divides once at the last page.
+  running max, and the final normalization divides once at the last page.
 
-Layouts (model code adapts via ``repro.kernels.ops.paged_decode_attention``):
+**Sharded serving** (``repro.parallel.pagedkv``) runs one kernel instance
+per chip over its (P/n, page, KV, D) pool shard with ``page_offset =
+chip * P/n`` and ``partials=True``: instead of the normalized output each
+chip emits its raw online-softmax triple — unnormalized ``acc`` (B, KV, G,
+D), row sum ``l`` and running max ``m`` (B, KV, G) — and the caller combines
+chips with one psum-style merge::
+
+    m*  = pmax(m);  w = exp(m - m*)
+    out = psum(acc * w) / psum(l * w)
+
+A chip that owns no live page of a slot contributes (acc=0, l=0,
+m=NEG_INF) — exactly the online-softmax identity element, so its merge
+weight is zero.
+
+Layouts (model code adapts via ``repro.kernels.ops``):
   q:          (B, KV, G, D)   one query token per slot, grouped GQA
   k/v pools:  (P, page, KV, D) physical pages; page 0 is the scratch page
-  page_table: (B, M) int32    logical -> physical page ids
+  page_table: (B, M) int32    logical -> physical page ids (GLOBAL ids even
+                              when the pool argument is a local shard)
   positions:  (B,) int32      per-slot decode position (the row just written)
-  out:        (B, KV, G, D)
+  out:        (B, KV, G, D)   — or (acc, l, m) when ``partials=True``
 
 Occupancy/shape assumptions (documented in ROADMAP): one program per
 (slot, kv-head) — B·KV programs — and the KV block equals one physical page,
 so TPU-efficient operation wants page·D tiles aligned to the (8, 128) fp32 /
 (16, 128) bf16 tiling (i.e. serve with page_size >= 8; tiny pages still run,
-they just underfill the MXU).  The page table and positions ride in SMEM:
-B·(M+1) int32 scalars per dispatch.
+they just underfill the MXU).  The page table, positions, and offset ride in
+SMEM: B·(M+1)+1 int32 scalars per dispatch.
 """
 from __future__ import annotations
 
@@ -54,8 +71,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
-            acc_scr, *, scale: float, page: int, n_pages: int):
+def _kernel(pt_ref, pos_ref, off_ref, q_ref, k_ref, v_ref, *refs,
+            scale: float, page: int, n_pages: int, p_local: int,
+            partials: bool):
+    if partials:
+        o_ref, l_ref, mx_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        o_ref, m_scr, l_scr, acc_scr = refs
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -66,11 +88,13 @@ def _kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
         acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
 
     pos = pos_ref[b]
+    local = pt_ref[b, j] - off_ref[0]
 
     # early exit: a page whose first row is past the slot's position has no
-    # live rows (its DMA was already redirected to the scratch page by the
-    # index map); skip its compute entirely
-    @pl.when(j * page <= pos)
+    # live rows, and a page outside this chip's [offset, offset+P_local)
+    # window lives in another chip's pool shard (its DMA was already
+    # redirected to local page 0 by the index map); skip compute entirely
+    @pl.when((j * page <= pos) & (local >= 0) & (local < p_local))
     def _body():
         q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)              # (page, D)
@@ -91,41 +115,74 @@ def _kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
 
     @pl.when(j == n_pages - 1)
     def _finalize():
-        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
-        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        if partials:
+            # raw online-softmax triple: the caller's cross-chip merge
+            # normalizes once, after combining every chip's contribution
+            o_ref[0, 0] = acc_scr[...].astype(o_ref.dtype)
+            l_ref[0, 0] = l_scr[...]
+            mx_ref[0, 0] = m_scr[...]
+        else:
+            denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+            o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
 def paged_flash_decode(q, k_pool, v_pool, page_table, positions,
+                       page_offset=None, partials: bool = False,
                        interpret: bool = False):
     """q: (B, KV, G, D); k/v pools: (P, page, KV, D); page_table: (B, M)
-    int32; positions: (B,) int32.  Returns (B, KV, G, D)."""
+    int32; positions: (B,) int32.  Returns (B, KV, G, D).
+
+    ``page_offset`` (scalar int32, default 0): global page id of the pool
+    argument's first page — table entries outside ``[offset, offset + P)``
+    are treated exactly like dead pages (index-map redirect + compute skip).
+    ``partials=True`` returns the raw fp32 online-softmax triple
+    ``(acc (B,KV,G,D), l (B,KV,G), m (B,KV,G))`` instead of the normalized
+    output, for the cross-chip partial-softmax merge of sharded serving."""
     b, kv, g, d = q.shape
-    p_pages, page = k_pool.shape[:2]
+    p_local, page = k_pool.shape[:2]
     assert k_pool.shape == v_pool.shape and k_pool.shape[2:] == (kv, d), (
         q.shape, k_pool.shape, v_pool.shape)
     m = page_table.shape[1]
     assert page_table.shape == (b, m) and positions.shape == (b,), (
         page_table.shape, positions.shape, b)
     scale = 1.0 / math.sqrt(d)
+    if page_offset is None:
+        page_offset = 0
+    off = jnp.asarray(page_offset, jnp.int32).reshape(1)
 
-    def q_map(b_, h, j, pt, pos):
+    def q_map(b_, h, j, pt, pos, off):
         return (b_, h, 0, 0)
 
-    def kv_map(b_, h, j, pt, pos):
-        # the page-table walk: dead pages (past the slot's position) resolve
-        # to the scratch page so repeated dead steps elide their DMA
-        return (jnp.where(j * page <= pos[b_], pt[b_, j], 0), 0, h, 0)
+    def lm_map(b_, h, j, pt, pos, off):
+        return (b_, h, 0)
 
-    kernel = functools.partial(_kernel, scale=scale, page=page, n_pages=m)
+    def kv_map(b_, h, j, pt, pos, off):
+        # the page-table walk: dead pages (past the slot's position) and
+        # non-local pages (outside this chip's pool shard) resolve to local
+        # page 0 so repeated skipped steps elide their DMA
+        local = pt[b_, j] - off[0]
+        ok = (j * page <= pos[b_]) & (local >= 0) & (local < p_local)
+        return (jnp.where(ok, local, 0), 0, h, 0)
+
+    kernel = functools.partial(_kernel, scale=scale, page=page, n_pages=m,
+                               p_local=p_local, partials=partials)
+    out_specs = [pl.BlockSpec((1, 1, g, d), q_map)]
+    out_shape = [jax.ShapeDtypeStruct(
+        (b, kv, g, d), jnp.float32 if partials else q.dtype)]
+    if partials:
+        out_specs += [pl.BlockSpec((1, 1, g), lm_map),
+                      pl.BlockSpec((1, 1, g), lm_map)]
+        out_shape += [jax.ShapeDtypeStruct((b, kv, g), jnp.float32),
+                      jax.ShapeDtypeStruct((b, kv, g), jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(b, kv, m),
         in_specs=[
             pl.BlockSpec((1, 1, g, d), q_map),
             pl.BlockSpec((1, page, 1, d), kv_map),
             pl.BlockSpec((1, page, 1, d), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, d), q_map),
+        out_specs=out_specs if partials else out_specs[0],
         scratch_shapes=[
             pltpu.VMEM((g,), jnp.float32),       # running max
             pltpu.VMEM((g,), jnp.float32),       # running sum
@@ -134,7 +191,7 @@ def paged_flash_decode(q, k_pool, v_pool, page_table, positions,
     )
     return pl.pallas_call(
         kernel, grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
+        out_shape=out_shape if partials else out_shape[0],
         interpret=interpret,
-    )(page_table.astype(jnp.int32), positions.astype(jnp.int32),
+    )(page_table.astype(jnp.int32), positions.astype(jnp.int32), off,
       q, k_pool, v_pool)

@@ -11,6 +11,9 @@ contiguous dense rows via ``--cache-backend contiguous``.
         --num-pages 48   # tight pool: watch admissions defer, not OOM
     python -m repro.launch.serve --decode-impl pallas   # page-table-walking
         # flash-decode kernel: no gathered dense KV transient per step
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.launch.serve --mesh 4   # sharded paged serving:
+        # pools pinned P/4 pages per chip, partial-softmax merged reads
 """
 from __future__ import annotations
 
@@ -53,6 +56,22 @@ def main():
                          "flash-decode kernel, O(page) transient; interpret "
                          "mode on CPU, Mosaic on TPU).  Ignored by "
                          "--cache-backend contiguous")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="sharded paged serving over an N-chip inference "
+                         "mesh: the page pool's kv_pages dim shards P/N "
+                         "pages per chip (pool HBM scales down with N) and "
+                         "the fused decode runs under shard_map — each chip "
+                         "attends only to the page-id range it owns, "
+                         "skipping non-local pages like dead pages, and the "
+                         "per-chip online-softmax partials (acc, l, m) "
+                         "combine with one psum-style partial-softmax "
+                         "merge.  Requires N visible devices (on CPU: "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count="
+                         "N) and --cache-backend paged.  0 = single-device")
+    ap.add_argument("--mesh-axis", default="model",
+                    help="mesh axis name the kv_pages dim maps onto "
+                         "(default: model, matching the kv_pages sharding "
+                         "rule in repro.parallel.sharding)")
     args = ap.parse_args()
 
     import dataclasses
@@ -61,11 +80,16 @@ def main():
         cfg = dataclasses.replace(cfg.reduced(), dtype="float32")
     lm = LM(cfg)
     params = lm.init(jax.random.key(0))
+    mesh = None
+    if args.mesh:
+        from repro.parallel.mesh import make_mesh
+        mesh = make_mesh((args.mesh,), (args.mesh_axis,))
     eng = ServeEngine(lm, params, args.max_batch, args.max_seq,
                       cache_backend=args.cache_backend,
                       page_size=args.page_size, num_pages=args.num_pages,
                       prefix_sharing=not args.no_prefix_sharing,
-                      decode_impl=args.decode_impl)
+                      decode_impl=args.decode_impl, mesh=mesh,
+                      kv_axis=args.mesh_axis)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -96,6 +120,9 @@ def main():
     print(f"kv cache [{st.backend}]: {st.bytes_total/1e6:.2f} MB pinned"
           + (f", {st.pages_total} pages of {st.page_size}"
              if st.backend == "paged" else "")
+          + (f", sharded over {st.mesh_chips} chips "
+             f"({st.bytes_per_chip/1e6:.2f} MB/chip)"
+             if st.mesh_chips > 1 else "")
           + f"; admissions deferred={deferred:.0f}; "
           f"prefill batch p50={pf_h.quantile(0.5):.0f}")
     if st.backend == "paged":

@@ -267,6 +267,62 @@ def gather_pages(pool, page_table, positions=None):
     return k.reshape(b, m * page, *pool.shape[2:])
 
 
+def paged_gather_partials(q, k_pool, v_pool, page_table, positions,
+                          page_offset):
+    """Per-chip partial paged decode by XLA gather — the sharded-serving
+    counterpart of the plain gather path, so gather/pallas parity holds on
+    every backend (the Pallas twin is ``kernels.ops.paged_decode_partials``).
+
+    q: (B, 1, KV, G, D); pools: one chip's LOCAL (P/n, page, KV, D) shard;
+    page_table: (B, M) GLOBAL page ids; page_offset: global id of the local
+    shard's first page.  Table entries outside ``[offset, offset + P/n)``
+    are masked exactly like dead pages: their gather rows redirect to local
+    page 0 and their scores to NEG_INF, so each chip materializes only its
+    own dense-equivalent view and attends only to rows it owns.
+
+    Returns the raw fp32 online-softmax triple ``(acc (B,1,KV,G,D),
+    l (B,KV,G), m (B,KV,G))``; ``merge_paged_partials`` combines chips.  A
+    chip owning no live page of a slot returns the identity element
+    (acc=0, l=0, m=NEG_INF) — note the explicit ``where`` on p below: with
+    every score at NEG_INF the naive ``exp(s - max)`` would be exp(0)=1."""
+    hd = q.shape[-1]
+    b, m = page_table.shape
+    pn, page = k_pool.shape[:2]
+    live = jnp.arange(m)[None, :] <= positions[:, None] // page    # (B, M)
+    local = page_table - page_offset
+    ok = live & (local >= 0) & (local < pn)
+    lt = jnp.where(ok, local, 0)
+    kg = jnp.take(k_pool, lt, axis=0).reshape(b, m * page, *k_pool.shape[2:])
+    vg = jnp.take(v_pool, lt, axis=0).reshape(b, m * page, *v_pool.shape[2:])
+    s = jnp.einsum("bkgd,bskd->bkgs", q[:, 0], kg).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    rows = jnp.arange(m * page)[None, :]
+    valid = (rows <= positions[:, None]) \
+        & jnp.repeat(ok, page, axis=1)                             # (B, S)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    mx = jnp.max(s, axis=-1)                                       # (B,KV,G)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(s - mx[..., None]), 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgs,bskd->bkgd", p, vg.astype(jnp.float32))
+    return acc[:, None], l, mx
+
+
+def merge_paged_partials(acc, l, m, axis_name: str):
+    """Cross-chip online-softmax merge (inside shard_map): combine per-chip
+    raw triples into the full softmax with one pmax + two psums.
+
+    acc: (B, 1, KV, G, D) unnormalized; l, m: (B, KV, G).  Chips with no
+    live pages carry m = NEG_INF, so their weight exp(m - m*) is exactly 0.
+    The denominator can only vanish if *no* chip saw a live row, which the
+    scratch-page convention rules out (logical page 0 is live at every
+    position >= 0, and freed slots' tables point at physical page 0)."""
+    gm = jax.lax.pmax(m, axis_name)
+    w = jnp.exp(m - gm)                                            # (B,KV,G)
+    num = jax.lax.psum(acc * w[:, None, :, :, None], axis_name)
+    den = jax.lax.psum(l * w, axis_name)
+    return num / jnp.maximum(den, 1e-30)[:, None, :, :, None]
+
+
 def decode_attention(q, k_cache, v_cache, cache_index, page_table=None,
                      impl: str = "gather"):
     """q: (B,1,KV,G,D); attends to positions <= index.
@@ -376,9 +432,31 @@ def _scatter_paged_kv(pool, new, page_table, positions):
     return flat.reshape(pool.shape)
 
 
+def scatter_paged_kv_local(pool, new, page_table, positions, page_offset):
+    """Sharded paged cache write (inside shard_map): each chip applies only
+    the writes that land in its own (P/n, page, KV, D) pool shard.
+
+    Slot b's write page is ``table[b, pos // page]`` — a GLOBAL id; the chip
+    owning it (``offset <= id < offset + P/n``) scatters the row at the
+    local flat index, every other chip routes that slot's write one past the
+    end of its shard and ``mode="drop"`` discards it.  Exactly one chip
+    (or zero, for freed slots whose scratch page 0 lives on chip 0) commits
+    each token, so the union of shards equals the single-device pool."""
+    pn, page = pool.shape[:2]
+    flat = pool.reshape(pn * page, *pool.shape[2:])
+    page_ids = jnp.take_along_axis(
+        page_table, (positions // page)[:, None], axis=1)[:, 0]
+    local = page_ids - page_offset
+    idx = jnp.where((local >= 0) & (local < pn),
+                    local * page + positions % page, pn * page)
+    flat = flat.at[idx].set(new[:, 0].astype(pool.dtype), mode="drop")
+    return flat.reshape(pool.shape)
+
+
 def attention_decode_block(p, cfg, x, k_cache, v_cache, cache_index,
                            rope: bool = True, page_table=None,
-                           decode_impl: str = "gather"):
+                           decode_impl: str = "gather", mesh=None,
+                           kv_axis: str = "model"):
     """One-token decode.  x: (B,1,d).  ``cache_index`` is a scalar
     (synchronized batch) or a (B,) vector of per-slot positions (ragged
     continuous batching: per-slot RoPE, scatter-write, and causal mask).
@@ -387,16 +465,25 @@ def attention_decode_block(p, cfg, x, k_cache, v_cache, cache_index,
     (B, M) — (P,page,KV,D) physical pools indexed through the table (the
     paged backend of ``repro.serve.kvcache``), resolved per ``decode_impl``
     ("gather": XLA dense-equivalent view; "pallas": page-table-walking
-    flash kernel).  Returns (y, new_k_cache, new_v_cache)."""
+    flash kernel).  With ``mesh`` (paged only), the pools are sharded P/n
+    along ``kv_axis`` and the scatter-write + table resolution run under
+    shard_map with a cross-chip partial-softmax merge
+    (``repro.parallel.pagedkv``).  Returns (y, new_k_cache, new_v_cache)."""
     b = x.shape[0]
     per_slot = jnp.ndim(cache_index) > 0
     pos = decode_positions(cache_index, b)
     q, k, v = project_qkv(p, cfg, x, x, pos[:, None], pos[:, None], rope=rope)
     if page_table is not None:
-        k_cache = _scatter_paged_kv(k_cache, k, page_table, pos)
-        v_cache = _scatter_paged_kv(v_cache, v, page_table, pos)
-        y = decode_attention(q, k_cache, v_cache, pos, page_table=page_table,
-                             impl=decode_impl)
+        if mesh is not None:
+            from repro.parallel.pagedkv import sharded_paged_decode_attention
+            y, k_cache, v_cache = sharded_paged_decode_attention(
+                mesh, kv_axis, q, k, v, k_cache, v_cache, page_table, pos,
+                decode_impl)
+        else:
+            k_cache = _scatter_paged_kv(k_cache, k, page_table, pos)
+            v_cache = _scatter_paged_kv(v_cache, v, page_table, pos)
+            y = decode_attention(q, k_cache, v_cache, pos,
+                                 page_table=page_table, impl=decode_impl)
         y = constrain(y, ("batch", None, None, None, None))
         return output_proj(p, cfg, y), k_cache, v_cache
     # Pin the cache sharding (batch over DP, sequence over the model axis —

@@ -64,25 +64,32 @@ class LM:
         return logits[:, -1:, :], cache
 
     def decode_step(self, params, tokens, cache, cache_index,
-                    scan_layers: bool = True, decode_impl: str = "gather"):
+                    scan_layers: bool = True, decode_impl: str = "gather",
+                    mesh=None, kv_axis: str = "model"):
         """One-token decode.  ``cache_index`` is a scalar shared position or
         a (B,) per-slot position vector (ragged continuous batching).
         ``decode_impl`` selects how a paged cache's page table is resolved
         ("gather": XLA fallback; "pallas": page-table-walking flash-decode
-        kernel); contiguous caches ignore it."""
+        kernel); contiguous caches ignore it.  ``mesh`` (paged only) runs
+        each layer's scatter+attention under shard_map over pools sharded
+        P/n along ``kv_axis``, merging per-chip softmax partials
+        (``repro.parallel.pagedkv``)."""
         if self.is_encdec:
+            assert mesh is None, "sharded paged decode is decoder-only"
             return encdec.decode_step(params, self.cfg, tokens, cache,
                                       cache_index, scan_layers=scan_layers)
         return transformer.decode_step(params, self.cfg, tokens, cache,
                                        cache_index, scan_layers=scan_layers,
-                                       decode_impl=decode_impl)
+                                       decode_impl=decode_impl, mesh=mesh,
+                                       kv_axis=kv_axis)
 
     def init_cache(self, batch_size: int, max_seq: int, enc_len: int = 0,
                    dtype=jnp.bfloat16, abstract: bool = False,
                    backend: Optional[str] = None, page_size: int = 16,
                    num_pages: Optional[int] = None,
                    prefix_sharing: bool = True,
-                   decode_impl: str = "gather"):
+                   decode_impl: str = "gather",
+                   mesh=None, kv_axis: str = "model"):
         """Decode cache construction.
 
         ``backend=None`` (train / dry-run) returns the raw dense pytree —
@@ -91,7 +98,9 @@ class LM:
         a managed ``repro.serve.kvcache`` backend (alloc / free / page-table
         indirection / prefix sharing) for the serve engine; ``decode_impl``
         rides on the backend and tells decode consumers how to resolve the
-        page table ("gather" / "pallas")."""
+        page table ("gather" / "pallas").  ``mesh`` (paged only) shards the
+        page pools P/n along the ``kv_pages`` logical axis -> ``kv_axis``
+        mesh axis, padding the pool up to a multiple of the mesh size."""
         if backend is not None:
             assert not abstract, "managed cache backends are concrete-only"
             from repro.serve.kvcache import make_cache
@@ -99,7 +108,8 @@ class LM:
                               backend=backend, page_size=page_size,
                               num_pages=num_pages,
                               prefix_sharing=prefix_sharing,
-                              decode_impl=decode_impl)
+                              decode_impl=decode_impl, mesh=mesh,
+                              kv_axis=kv_axis)
         if self.is_encdec:
             return encdec.init_cache(self.cfg, batch_size, max_seq,
                                      enc_len or max_seq // self.cfg.enc_ratio,

@@ -378,7 +378,8 @@ def _scan_or_unroll(body, init, xs, n: int, scan: bool):
 
 
 def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
-                scan_layers: bool = True, decode_impl: str = "gather"):
+                scan_layers: bool = True, decode_impl: str = "gather",
+                mesh=None, kv_axis: str = "model"):
     """One-token decode.  tokens: (B, 1).  Returns (logits, new_cache).
 
     ``cache_index`` is a scalar (all sequences at the same depth) or a (B,)
@@ -396,7 +397,12 @@ def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
     Pallas flash kernel (``decode_impl="pallas"``,
     ``repro.kernels.paged_decode``).  The returned pytree keeps the same
     structure (the page table passes through unchanged — it is
-    host-managed)."""
+    host-managed).
+
+    ``mesh`` (paged caches only): the pools are ``kv_pages``-sharded P/n
+    along ``kv_axis`` and each layer's scatter+attention runs under
+    shard_map with a cross-chip partial-softmax merge
+    (``repro.parallel.pagedkv``)."""
     del img_embeds  # image tokens only participate via the prefill cache
     page_table = cache.get("page_table") if isinstance(cache, dict) else None
     assert decode_impl in ("gather", "pallas"), decode_impl
@@ -404,6 +410,9 @@ def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
         assert cfg.family in ("dense", "vlm", "moe"), (
             "paged KV decode is attention-cache families only; recurrent "
             f"state has no page structure (family={cfg.family})")
+    assert mesh is None or page_table is not None, (
+        "a decode mesh shards the paged pool's kv_pages dim; the dense "
+        "cache layout has no page dim to shard (use the paged backend)")
     dtype = jnp.dtype(cfg.dtype)
     h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dtype)
     h = constrain(h, ("batch", None, "embed"))
@@ -422,7 +431,8 @@ def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
             a_in = apply_norm(lp["ln1"], h, cfg)
             a, nk, nv = attn.attention_decode_block(
                 lp["attn"], cfg, a_in, layer_cache["k"], layer_cache["v"],
-                cache_index, page_table=page_table, decode_impl=decode_impl)
+                cache_index, page_table=page_table, decode_impl=decode_impl,
+                mesh=mesh, kv_axis=kv_axis)
             h = h + a
             f_in = apply_norm(lp["ln2"], h, cfg)
             if "moe" in lp:

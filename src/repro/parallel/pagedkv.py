@@ -1,0 +1,107 @@
+"""Sharded paged serving: ``kv_pages``-partitioned pools under shard_map.
+
+The paged KV pool's leading (P) dim carries the ``kv_pages`` logical axis
+(``repro.parallel.sharding.default_rules`` maps it to the ``model`` mesh
+axis), so an inference mesh of n chips pins P/n pages each — pool HBM
+scales *down* with the mesh instead of being replicated.  Chip c owns the
+global page-id range ``[c*P/n, (c+1)*P/n)``; the (B, M) page table and the
+single-token q/K/V stay replicated (B·M int32 + one token per slot — noise
+next to the pool).
+
+One decode step = one shard_map region per layer:
+
+1. **Local scatter-write** — the chip owning the write page
+   ``table[b, pos // page]`` commits the new K/V row at its local flat
+   index; every other chip's write is ``mode="drop"``-discarded
+   (``repro.models.attention.scatter_paged_kv_local``).
+2. **Local partial attention** — each chip attends only to pages inside
+   its window, treating non-local pages exactly like dead pages:
+   the Pallas kernel's index map redirects them to local page 0 and
+   ``pl.when`` skips their compute (``kernels.ops.paged_decode_partials``),
+   and the XLA gather twin masks them to NEG_INF
+   (``attention.paged_gather_partials``) so the same merge covers CPU.
+   Either way the chip emits the raw online-softmax triple (acc, l, m).
+3. **Partial-softmax merge** — one pmax + two psums reconstruct the exact
+   softmax over the union of chips (``attention.merge_paged_partials``):
+   ``out = psum(acc · exp(m - pmax(m))) / psum(l · exp(m - pmax(m)))``.
+
+The merge moves O(B·KV·G·(D+2)) fp32 per layer over ICI — independent of
+both the pool width and the sequence length, the flash-decoding property
+that makes the page dimension the right thing to shard.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.parallel.mesh import mesh_axis_size
+from repro.parallel.sharding import default_rules, shard_map, spec_for
+
+# logical axes of a per-layer-stacked page pool (L, P, page, KV, D); only
+# kv_pages resolves to a mesh axis — the page/head/dim axes stay local so
+# each chip holds whole pages (the kernel's block unit)
+POOL_LOGICAL_AXES = ("layers", "kv_pages", None, None, None)
+
+
+def kv_pool_spec(mesh, pool_shape, rules=None,
+                 axis: str = None) -> PartitionSpec:
+    """PartitionSpec for a (L, P, page, KV, D) pool: ``kv_pages`` -> mesh.
+
+    ``axis`` overrides the rule's target mesh axis (PagedCache passes its
+    ``kv_axis`` so a non-default axis name still shards the pool)."""
+    rules = dict(rules if rules is not None
+                 else default_rules(mesh.axis_names))
+    if axis is not None:
+        rules["kv_pages"] = axis
+    return spec_for(POOL_LOGICAL_AXES, pool_shape, rules, mesh)
+
+
+def kv_pool_sharding(mesh, pool_shape, rules=None,
+                     axis: str = None) -> NamedSharding:
+    return NamedSharding(mesh, kv_pool_spec(mesh, pool_shape, rules, axis))
+
+
+def sharded_paged_decode_attention(mesh, axis: str, q, k_new, v_new,
+                                   k_pool, v_pool, page_table, positions,
+                                   decode_impl: str = "gather"):
+    """One layer's sharded paged decode: scatter the new token into the
+    owning chip's pool shard, compute per-chip softmax partials, merge.
+
+    q: (B, 1, KV, G, D); k_new/v_new: (B, 1, KV, D) this step's projected
+    K/V; pools: (P, page, KV, D) GLOBAL views sharded P/n over ``axis``;
+    page_table: (B, M) global ids; positions: (B,).  Returns
+    (y (B,1,KV,G,D), new_k_pool, new_v_pool) with the pools still sharded.
+
+    ``decode_impl`` picks the per-chip partial producer: ``"pallas"`` (the
+    page-table-walking kernel with its local window) or ``"gather"`` (XLA
+    local-masked gather) — both feed the identical merge, so the two impls
+    stay in parity sharded exactly as they do on one chip."""
+    from repro.kernels import ops as kops
+    from repro.models import attention as attn
+
+    n = mesh_axis_size(mesh, axis)
+    p_total = k_pool.shape[0]
+    assert p_total % n == 0, (
+        f"page pool P={p_total} must divide the {axis!r} axis ({n}); "
+        "PagedCache pads the pool up to a multiple of the mesh size")
+    pn = p_total // n
+
+    def body(q, kn, vn, pt, pos, kp, vp):
+        off = (jax.lax.axis_index(axis) * pn).astype(jnp.int32)
+        kp = attn.scatter_paged_kv_local(kp, kn, pt, pos, off)
+        vp = attn.scatter_paged_kv_local(vp, vn, pt, pos, off)
+        if decode_impl == "pallas":
+            acc, l, m = kops.paged_decode_partials(q, kp, vp, pt, pos, off)
+        else:
+            assert decode_impl == "gather", decode_impl
+            acc, l, m = attn.paged_gather_partials(q, kp, vp, pt, pos, off)
+        y = attn.merge_paged_partials(acc, l, m, axis).astype(q.dtype)
+        return y, kp, vp
+
+    rep = PartitionSpec()
+    sh = PartitionSpec(axis)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(rep, rep, rep, rep, rep, sh, sh),
+                   out_specs=(rep, sh, sh), check_vma=False)
+    return fn(q, k_new, v_new, page_table, positions, k_pool, v_pool)

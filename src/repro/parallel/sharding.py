@@ -70,6 +70,10 @@ def default_rules(mesh_axes: Sequence[str], *, fsdp: bool = True,
         "seq": None,
         "seq_sp": None,   # -> "model" enables sequence-parallel residual (§Perf)
         "kv_seq": (dp + ("model",)) if seq_sharded_cache else ("model",),
+        # paged serving: the page pool's leading (P) dim shards P/n per chip
+        # over the model axis (repro.parallel.pagedkv) — pinned pool bytes
+        # scale down with the mesh, reads merge by partial softmax
+        "kv_pages": "model",
         "enc_seq": None,
         # weights
         "vocab": "model",

@@ -22,6 +22,16 @@ regime of Figs 5/6/8.  Design:
   the paged table is resolved per step: ``"gather"`` (XLA fallback,
   O(B·M·page) transient) or ``"pallas"`` (the page-table-walking
   flash-decode kernel, O(page) transient — ``repro.kernels.paged_decode``).
+* **Sharded paged serving** (``mesh=``): the page pools carry the
+  ``kv_pages`` logical axis and shard P/n over the ``kv_axis`` mesh axis,
+  so pinned pool HBM scales *down* with the inference mesh.  The fused
+  dispatch stays one device call: inside it, each layer's scatter-write +
+  paged attention runs under shard_map — every chip owns the page-id range
+  ``[chip*P/n, (chip+1)*P/n)``, treats non-local pages exactly like dead
+  pages, and the per-chip online-softmax partials merge with one
+  pmax + two psums (``repro.parallel.pagedkv``).  ``PagedCache.alloc``'s
+  free list is locality-aware (prefers one chip per request) without ever
+  changing admission decisions.
 * **Batched bucketed prefill**: admitted prompts are grouped by power-of-two
   length bucket and each group runs as a *single* ``lm.forward`` call whose
   K/V block is scatter-written into every admitted slot's cache rows/pages
@@ -124,7 +134,8 @@ class ServeEngine:
                  cache_backend: str = "paged", page_size: int = 16,
                  num_pages: Optional[int] = None,
                  prefix_sharing: bool = True,
-                 decode_impl: str = "gather"):
+                 decode_impl: str = "gather",
+                 mesh=None, kv_axis: str = "model"):
         # per-slot positions rely on masked-then-overwritten cache writes,
         # which holds for attention KV caches but not recurrent state
         assert lm.cfg.family in ("dense", "moe", "vlm"), (
@@ -145,7 +156,8 @@ class ServeEngine:
                                 backend=cache_backend, page_size=page_size,
                                 num_pages=num_pages,
                                 prefix_sharing=prefix_sharing,
-                                decode_impl=decode_impl)
+                                decode_impl=decode_impl, mesh=mesh,
+                                kv_axis=kv_axis)
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int32)   # next write index
         self.queue: List[Request] = []
@@ -177,6 +189,7 @@ class ServeEngine:
         most two jit cache entries)."""
         lm, vocab = self.lm, self.lm.cfg.vocab_size
         decode_impl = self.kv.decode_impl   # fixed per engine (kvcache config)
+        mesh, kv_axis = self.kv.mesh, self.kv.kv_axis
 
         def fused(params, tokens, layers, page_table, positions, active,
                   temps, top_ks, top_ps, seeds, steps, all_greedy):
@@ -184,7 +197,8 @@ class ServeEngine:
             if page_table is not None:
                 cache["page_table"] = page_table
             logits, cache = lm.decode_step(params, tokens, cache, positions,
-                                           decode_impl=decode_impl)
+                                           decode_impl=decode_impl,
+                                           mesh=mesh, kv_axis=kv_axis)
             rows = logits[:, -1, :vocab].astype(jnp.float32)
             if all_greedy:
                 tok = jnp.argmax(rows, axis=-1).astype(jnp.int32)
@@ -203,7 +217,7 @@ class ServeEngine:
         (group size, prompt bucket) pair."""
         lm, opts, vocab = self.lm, self.opts, self.lm.cfg.vocab_size
         has_img = self.img_len > 0
-        writer = type(self.kv).staged_write_prefill
+        writer = self.kv.staged_write_prefill
 
         def run(params, tokens, img_embeds, layers, write_spec, last_idx,
                 temps, top_ks, top_ps, seeds):
@@ -414,6 +428,7 @@ class ServeEngine:
         self.reg.gauge("serve_kv_pages_in_use").set(st.pages_in_use)
         self.reg.gauge("serve_kv_bytes_reserved").set(st.bytes_reserved)
         self.reg.gauge("serve_kv_pages_shared").set(st.pages_shared)
+        self.reg.gauge("serve_kv_bytes_per_chip").set(st.bytes_per_chip)
         # per-step transient of the paged KV read path (byte math, one
         # layer): the gather fallback scales with B·M·page, the pallas
         # kernel with the page block only — dense rows gather nothing

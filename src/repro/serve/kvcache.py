@@ -90,6 +90,8 @@ class MemoryStats:
     pages_total: int = 0      # usable pages (excludes the scratch page)
     pages_in_use: int = 0
     pages_shared: int = 0     # pages with refcount > 1 (prefix sharing)
+    mesh_chips: int = 1       # devices the pool is kv_pages-sharded over
+    bytes_per_chip: int = 0   # pinned bytes each chip holds (= total / chips)
 
 
 class KVCache(Protocol):
@@ -113,11 +115,16 @@ class KVCache(Protocol):
     ``write_prefill`` the engine traces into its one-dispatch-per-bucket
     batched prefill — its ``write_spec`` is backend-defined ((n,) slot ids
     for contiguous; (n, Sblk) flat pool indices from ``prefill_dest`` for
-    paged).
+    paged).  ``mesh`` / ``kv_axis`` describe how the backend's storage is
+    device-sharded (None / 1-extent for single-chip backends) — the engine
+    forwards them into ``lm.decode_step`` so the fused dispatch runs the
+    matching shard_map.
     """
 
     backend: str
     state: dict
+    mesh: object
+    kv_axis: str
 
     def alloc(self, slot: int, length: int,
               prefix: Optional[np.ndarray] = None) -> Optional[int]: ...
@@ -127,8 +134,7 @@ class KVCache(Protocol):
     def free(self, slot: int) -> None: ...
     def memory_stats(self) -> MemoryStats: ...
     def can_ever_fit(self, length: int) -> bool: ...
-    @staticmethod
-    def staged_write_prefill(layers, kv_block, write_spec): ...
+    def staged_write_prefill(self, layers, kv_block, write_spec): ...
 
 
 # ---------------------------------------------------------- contiguous ----
@@ -144,6 +150,8 @@ class ContiguousCache:
 
     backend = "contiguous"
     decode_impl = "gather"      # dense rows have no page table to resolve
+    mesh = None                 # dense rows have no kv_pages dim to shard
+    kv_axis = "model"
 
     def __init__(self, lm, batch: int, max_seq: int, dtype=jnp.bfloat16):
         self.cfg = lm.cfg
@@ -198,7 +206,8 @@ class ContiguousCache:
     def memory_stats(self) -> MemoryStats:
         return MemoryStats(backend=self.backend, bytes_total=self._bytes,
                            bytes_reserved=self._bytes, slots_total=self.B,
-                           slots_in_use=int(self._in_use.sum()))
+                           slots_in_use=int(self._in_use.sum()),
+                           bytes_per_chip=self._bytes)
 
 
 # --------------------------------------------------------------- paged ----
@@ -219,13 +228,26 @@ class PagedCache:
     writing them (its prefill scatter routes those positions to scratch).
     The first page *not* fully covered by the prompt is always privately
     owned, so decode scatter-writes never touch shared storage.
+
+    **Sharded pools** (``mesh``): the pool's leading (P) dim carries the
+    ``kv_pages`` logical axis and shards P/n over ``kv_axis`` — each chip
+    pins P/n pages and owns the global page-id range
+    ``[chip*P/n, (chip+1)*P/n)`` (``repro.parallel.pagedkv``); the pool is
+    padded up to a multiple of the mesh size.  The free list becomes
+    **locality-aware**: it prefers handing one request pages from one chip
+    (fewer chips touched per slot), spilling across chips only when no
+    single chip can cover the request — and admission (admit vs defer)
+    depends only on the *total* free count, never on placement, so locality
+    is a performance hint with zero behavioural surface.
     """
 
     backend = "paged"
 
     def __init__(self, lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 prefix_sharing: bool = True, decode_impl: str = "gather"):
+                 prefix_sharing: bool = True, decode_impl: str = "gather",
+                 mesh=None, kv_axis: str = "model",
+                 locality_chips: Optional[int] = None):
         cfg = lm.cfg
         assert cfg.family in ("dense", "vlm", "moe"), (
             "paged KV is attention-cache families only "
@@ -240,16 +262,46 @@ class PagedCache:
             # swapping backends never changes admission behaviour
             num_pages = batch * self.max_pages + 1
         assert num_pages >= 2, "need at least scratch + one usable page"
+        self.mesh, self.kv_axis = mesh, kv_axis
+        if mesh is not None:
+            from repro.parallel.mesh import mesh_axis_size
+            assert locality_chips is None, (
+                "locality_chips is the mesh-free testing knob; with a mesh "
+                "the chip count is the kv_axis extent")
+            self.chips = mesh_axis_size(mesh, kv_axis)
+        else:
+            # locality_chips simulates the per-chip free-list partitioning
+            # without device sharding (host-side allocator tests)
+            self.chips = locality_chips or 1
+        # pad the pool so every chip holds the same P/n page count
+        num_pages = -(-num_pages // self.chips) * self.chips
         self.P = num_pages
+        self.pages_per_chip = num_pages // self.chips
         self.dtype = dtype
         self.prefix_sharing = prefix_sharing
         L, kvh, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
-        self.state = {"layers": {
-            "k": jnp.zeros((L, num_pages, page_size, kvh, hd), dtype),
-            "v": jnp.zeros((L, num_pages, page_size, kvh, hd), dtype)}}
+        pool_shape = (L, num_pages, page_size, kvh, hd)
+        self._pool_sharding = None
+        if mesh is not None:
+            from repro.parallel.pagedkv import kv_pool_sharding
+            self._pool_sharding = kv_pool_sharding(mesh, pool_shape,
+                                                   axis=kv_axis)
+
+        def pool():
+            z = jnp.zeros(pool_shape, dtype)
+            return (jax.device_put(z, self._pool_sharding)
+                    if self._pool_sharding is not None else z)
+
+        self.state = {"layers": {"k": pool(), "v": pool()}}
         self.page_table = np.zeros((batch, self.max_pages), np.int32)
         self._page_table_dev = None      # device copy, invalidated on mutation
-        self._free: List[int] = list(range(num_pages - 1, 0, -1))  # pop() = 1
+        # per-chip free stacks, pop() handing out the lowest id of the chip;
+        # the scratch page (global id 0, chip 0) is never listed
+        self._free_chip: List[List[int]] = [
+            [pid for pid in range(
+                min((c + 1) * self.pages_per_chip, num_pages) - 1,
+                max(c * self.pages_per_chip, 1) - 1, -1)]
+            for c in range(self.chips)]
         self._ref = np.zeros(num_pages, np.int32)
         self._hash_to_page: Dict[bytes, int] = {}
         self._page_to_hash: Dict[int, bytes] = {}
@@ -265,6 +317,30 @@ class PagedCache:
                 and self.pages_needed(length) <= self.P - 1)
 
     # ------------------------------------------------------------- alloc ----
+    def _free_count(self) -> int:
+        return sum(len(f) for f in self._free_chip)
+
+    def _take_fresh(self, need: int) -> List[int]:
+        """Pop ``need`` pages from the per-chip free stacks, locality-first.
+
+        Preference order: the chip that fits the request with the fewest
+        free pages to spare (best fit — keeps large same-chip runs intact
+        for later requests), else spill across chips from the fullest down.
+        The caller has already checked ``need <= _free_count()`` — placement
+        never changes whether a request is admitted."""
+        fits = [c for c in range(self.chips)
+                if len(self._free_chip[c]) >= need]
+        order = ([min(fits, key=lambda c: (len(self._free_chip[c]), c))]
+                 if fits else
+                 sorted(range(self.chips),
+                        key=lambda c: (-len(self._free_chip[c]), c)))
+        out: List[int] = []
+        for c in order:
+            while self._free_chip[c] and len(out) < need:
+                out.append(self._free_chip[c].pop())
+        assert len(out) == need, (len(out), need)
+        return out
+
     def alloc(self, slot: int, length: int,
               prefix: Optional[np.ndarray] = None) -> Optional[int]:
         """Reserve pages covering ``length`` positions for ``slot``.
@@ -289,11 +365,11 @@ class PagedCache:
                 if pid is None:
                     break
                 shared.append(pid)
-        if n_pages - len(shared) > len(self._free):
+        if n_pages - len(shared) > self._free_count():
             return None                      # admission control, not OOM
         for pid in shared:
             self._ref[pid] += 1
-        fresh = [self._free.pop() for _ in range(n_pages - len(shared))]
+        fresh = self._take_fresh(n_pages - len(shared))
         for pid in fresh:
             self._ref[pid] = 1
         pages = shared + fresh
@@ -334,19 +410,25 @@ class PagedCache:
         write = (pos >= shared_len) & (pos < valid_len)
         return np.where(write, idx, 0).astype(np.int32)
 
-    @staticmethod
-    def staged_write_prefill(layers, kv_block, dest):
+    def staged_write_prefill(self, layers, kv_block, dest):
         """Jit-stageable multi-request prefill scatter over the per-layer
         K/V pools (``state["layers"]``).
 
         kv_block: per-layer (L, n, Sblk, ...) K/V; dest: (n, Sblk) flat pool
-        indices (page * page_size + row, scratch-routed where masked).
+        indices (page * page_size + row, scratch-routed where masked).  On a
+        sharded pool the result is constrained back to the ``kv_pages``
+        sharding so the prefill dispatch doesn't leave a replicated pool
+        behind (GSPMD partitions the scatter itself).
         """
         def write(pool, small):
             p, pg = pool.shape[1], pool.shape[2]
             flat = pool.reshape(pool.shape[0], p * pg, *pool.shape[3:])
             flat = flat.at[:, dest].set(small.astype(pool.dtype))
-            return flat.reshape(pool.shape)
+            out = flat.reshape(pool.shape)
+            if self._pool_sharding is not None:
+                out = jax.lax.with_sharding_constraint(
+                    out, self._pool_sharding)
+            return out
 
         return jax.tree.map(write, layers, kv_block)
 
@@ -381,7 +463,7 @@ class PagedCache:
                 key = self._page_to_hash.pop(pid, None)
                 if key is not None:
                     del self._hash_to_page[key]
-                self._free.append(pid)
+                self._free_chip[pid // self.pages_per_chip].append(pid)
         self._slot_pages[slot] = []
         self._slot_shared[slot] = 0
         self.page_table[slot, :] = 0    # point the freed slot at scratch
@@ -391,13 +473,15 @@ class PagedCache:
     def memory_stats(self) -> MemoryStats:
         pb = page_kv_bytes(self.cfg, self.page, self.dtype)
         usable = self.P - 1
-        in_use = usable - len(self._free)
+        in_use = usable - self._free_count()
+        sharded = self.chips if self.mesh is not None else 1
         return MemoryStats(
             backend=self.backend, bytes_total=self.P * pb,
             bytes_reserved=in_use * pb, slots_total=self.B,
             slots_in_use=sum(bool(p) for p in self._slot_pages),
             page_size=self.page, pages_total=usable, pages_in_use=in_use,
-            pages_shared=int((self._ref > 1).sum()))
+            pages_shared=int((self._ref > 1).sum()),
+            mesh_chips=sharded, bytes_per_chip=self.P * pb // sharded)
 
 
 # ------------------------------------------------------------- factory ----
@@ -405,17 +489,25 @@ class PagedCache:
 def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
                backend: str = "contiguous", page_size: int = 16,
                num_pages: Optional[int] = None, prefix_sharing: bool = True,
-               decode_impl: str = "gather"):
+               decode_impl: str = "gather", mesh=None,
+               kv_axis: str = "model"):
     """Build a KV-cache backend for ``lm`` (the ``lm.init_cache(backend=...)``
     entry point).  ``decode_impl`` ("gather" / "pallas") rides on the paged
     backend and tells decode consumers how to resolve the page table; the
-    contiguous backend has no table and always reports "gather"."""
+    contiguous backend has no table and always reports "gather".  ``mesh``
+    shards the paged pool P/n over ``kv_axis`` (``kv_pages`` logical axis)
+    with a locality-aware free list."""
     if backend == "contiguous":
         if decode_impl != "gather":
             raise ValueError(
                 "decode_impl applies to the paged backend's page-table "
                 f"resolution; the contiguous layout has no table to walk "
                 f"(got decode_impl={decode_impl!r})")
+        if mesh is not None:
+            raise ValueError(
+                "kv_pages sharding partitions the paged pool's page dim; "
+                "the contiguous layout has no page dim (use backend='paged' "
+                "to serve over a mesh)")
         return ContiguousCache(lm, batch, max_seq, dtype=dtype)
     if backend == "paged":
         if lm.is_encdec:
@@ -425,5 +517,6 @@ def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
         return PagedCache(lm, batch, max_seq, dtype=dtype,
                           page_size=page_size, num_pages=num_pages,
                           prefix_sharing=prefix_sharing,
-                          decode_impl=decode_impl)
+                          decode_impl=decode_impl, mesh=mesh,
+                          kv_axis=kv_axis)
     raise ValueError(f"unknown KV-cache backend {backend!r}")

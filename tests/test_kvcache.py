@@ -291,6 +291,56 @@ def test_mixed_bucket_prompts_prefill_one_dispatch_per_bucket():
     assert h.count() == 2 and h.sum() == 4
 
 
+# ------------------------------------------------------------- engine soak ----
+
+def test_engine_soak_random_schedule_tight_pool_parity_and_telemetry():
+    """~200-step soak: a randomized submit schedule trickles ragged requests
+    into a pool tight enough to defer admissions and recycle pages/slots
+    continuously.  The paged engine must (a) emit exactly the streams an
+    unconstrained contiguous engine emits, and (b) keep its pool telemetry
+    inside invariants at every step: ``serve_kv_pages_in_use`` never exceeds
+    the pool and returns to 0 once drained."""
+    cfg, lm, params = small_lm()
+    rng = np.random.default_rng(41)
+    n_req, steps = 24, 200
+    # submit step -> requests arriving then (bursty: several per tick)
+    arrivals: dict = {}
+    for i in range(n_req):
+        arrivals.setdefault(int(rng.integers(0, 60)), []).append(
+            Request(i, rng.integers(0, cfg.vocab_size,
+                                    int(rng.integers(2, 9))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(2, 6))))
+
+    def run(**kw):
+        eng = ServeEngine(lm, params, max_batch=4, max_seq=32, **kw)
+        pages_total = eng.kv.memory_stats().pages_total
+        gauge = eng.reg.gauge("serve_kv_pages_in_use")
+        for step in range(steps):
+            for r in arrivals.get(step, []):
+                eng.submit(Request(r.id, r.prompt,
+                                   max_new_tokens=r.max_new_tokens))
+            eng.step()
+            if kw.get("cache_backend") == "paged":
+                st = eng.kv.memory_stats()
+                assert 0 <= st.pages_in_use <= pages_total, (step, st)
+                assert 0 <= gauge.get() <= pages_total, (step, gauge.get())
+                assert st.bytes_reserved <= st.bytes_total
+        assert not eng.queue and all(r is None for r in eng.slot_req), \
+            "soak schedule must drain within the step budget"
+        return {r.id: r.out_tokens for r in eng.finished}, eng
+
+    # 8 usable pages, footprints up to ceil((8+5)/4)=4 pages: 2-3 in flight
+    paged_out, paged_eng = run(cache_backend="paged", page_size=4,
+                               num_pages=9)
+    contig_out, _ = run(cache_backend="contiguous")
+    assert paged_out == contig_out
+    assert len(paged_out) == n_req
+    assert paged_eng.reg.counter("serve_admission_deferred_total").get() > 0
+    st = paged_eng.kv.memory_stats()
+    assert st.pages_in_use == 0 and st.slots_in_use == 0     # fully drained
+    assert paged_eng.reg.gauge("serve_kv_pages_in_use").get() == 0
+
+
 def test_encdec_rejects_paged_backend():
     cfg = dataclasses.replace(CONFIGS["seamless-m4t-large-v2"].reduced(),
                               dtype="float32")

@@ -77,6 +77,90 @@ def test_kernel_dead_pages_do_not_contribute():
     np.testing.assert_allclose(np.asarray(o_dead), np.asarray(o_live), **TOL)
 
 
+def test_kernel_fuzz_random_shapes_three_way():
+    """Seeded fuzz over (B, M, page_size, positions): pallas-interpret vs
+    the XLA gather path vs the dense ``paged_decode_ref`` oracle must agree
+    at every draw.  Positions deliberately include pos=0, both sides of
+    every page boundary, and the last valid row; tables include repeated
+    physical pages (prefix sharing aliases pages across slots)."""
+    from repro.models.attention import decode_attention
+
+    rng = np.random.default_rng(2024)          # reproducible by seed
+    for trial in range(6):
+        B = int(rng.integers(1, 6))
+        KV = int(rng.integers(1, 3))
+        G = int(rng.integers(1, 4))
+        D = int(rng.choice([4, 8, 16]))
+        page = int(rng.choice([2, 4, 8]))
+        M = int(rng.integers(1, 5))
+        P = int(B * M + rng.integers(1, 4))
+        q = jnp.asarray(rng.normal(size=(B, 1, KV, G, D)), jnp.float32)
+        kp = jnp.asarray(rng.normal(size=(P, page, KV, D)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(P, page, KV, D)), jnp.float32)
+        # repeated entries alias pages across slots, like prefix sharing
+        pt = jnp.asarray(rng.integers(1, P, (B, M)), jnp.int32)
+        boundary = np.array([0, page - 1, page, M * page - 1])
+        pos = np.where(rng.random(B) < 0.5,
+                       rng.choice(boundary, B),
+                       rng.integers(0, M * page, B)).astype(np.int32)
+        pos = jnp.asarray(np.minimum(pos, M * page - 1))
+
+        o_ref = paged_decode_ref(q[:, 0], kp, vp, pt, pos)
+        o_kernel = kops.paged_decode_attention(q, kp, vp, pt, pos)
+        o_gather = decode_attention(q, kp, vp, pos, page_table=pt,
+                                    impl="gather")
+        ctx = dict(trial=trial, B=B, KV=KV, G=G, D=D, page=page, M=M,
+                   pos=np.asarray(pos).tolist())
+        np.testing.assert_allclose(np.asarray(o_kernel[:, 0]),
+                                   np.asarray(o_ref), err_msg=str(ctx),
+                                   **TOL)
+        np.testing.assert_allclose(np.asarray(o_gather[:, 0]),
+                                   np.asarray(o_ref), err_msg=str(ctx),
+                                   **TOL)
+
+
+def test_partials_merge_matches_full_softmax_singlehost():
+    """The sharded path's building blocks, checked without a mesh: gather
+    partials over two half-pools, merged with the partial-softmax formula,
+    equal the full-pool softmax — and the pallas partials triple matches the
+    gather partials triple on the same half-pool."""
+    from repro.models.attention import (decode_attention,
+                                        paged_gather_partials)
+
+    rng = np.random.default_rng(8)
+    B, KV, G, D, page, M, P = 3, 2, 2, 8, 4, 3, 12   # halves of 6 pages
+    q = jnp.asarray(rng.normal(size=(B, 1, KV, G, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, page, KV, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, page, KV, D)), jnp.float32)
+    pt = jnp.asarray(rng.integers(1, P, (B, M)), jnp.int32)
+    pos = jnp.asarray([0, 5, 11], jnp.int32)
+
+    half = P // 2
+    parts = [paged_gather_partials(q, kp[c * half:(c + 1) * half],
+                                   vp[c * half:(c + 1) * half], pt, pos,
+                                   jnp.int32(c * half)) for c in range(2)]
+    # host-side merge (the on-mesh version uses pmax/psum over chips)
+    ms = jnp.stack([m for _, _, m in parts])
+    gm = ms.max(axis=0)
+    num = sum(acc * jnp.exp(m - gm)[:, None, :, :, None]
+              for acc, _, m in parts)
+    den = sum(l * jnp.exp(m - gm) for _, l, m in parts)
+    merged = num / jnp.maximum(den, 1e-30)[:, None, :, :, None]
+    full = decode_attention(q, kp, vp, pos, page_table=pt, impl="gather")
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(full), **TOL)
+
+    # kernel partials == gather partials on one half-pool window
+    acc_g, l_g, m_g = parts[1]
+    acc_k, l_k, m_k = kops.paged_decode_partials(
+        q, kp[half:], vp[half:], pt, pos, jnp.int32(half))
+    np.testing.assert_allclose(np.asarray(l_k), np.asarray(l_g), **TOL)
+    # only compare running maxima where a live page exists (both report
+    # NEG_INF identity otherwise, but -1e30 equality is exact anyway)
+    np.testing.assert_allclose(np.asarray(m_k), np.asarray(m_g), **TOL)
+    np.testing.assert_allclose(np.asarray(acc_k), np.asarray(acc_g),
+                               rtol=2e-4, atol=2e-4)
+
+
 # ----------------------------------------------------------- decode parity ----
 
 def test_ragged_8slot_kernel_vs_gather_vs_contiguous():

@@ -106,6 +106,136 @@ def test_error_feedback_reduces_bias(seed):
                                atol=float(scale) / steps + 1e-4)
 
 
+# ------------------------------------------------------- paged allocator ----
+
+_ALLOC_LM = None
+
+
+def _alloc_lm():
+    """One tiny LM shared by every hypothesis example (pool construction
+    needs real cfg shapes; building the config once keeps examples cheap)."""
+    global _ALLOC_LM
+    if _ALLOC_LM is None:
+        import dataclasses
+        from repro.configs import CONFIGS
+        from repro.models import LM
+        cfg = dataclasses.replace(CONFIGS["llama3.2-3b"].reduced(),
+                                  dtype="float32", num_layers=1)
+        _ALLOC_LM = LM(cfg)
+    return _ALLOC_LM
+
+
+# op stream: (kind, slot, length, prefix_id) — prefix_id picks one of three
+# canonical prompts so alloc sequences actually hit the sharing path
+alloc_ops_st = st.lists(
+    st.tuples(st.sampled_from(["alloc", "free", "write"]),
+              st.integers(0, 3),                  # slot
+              st.integers(1, 24),                 # length (footprint)
+              st.integers(0, 2)),                 # prefix choice
+    min_size=1, max_size=25)
+
+
+def _drive(kv, ops, record=None):
+    """Apply an op stream to a PagedCache; returns the admit/defer trace."""
+    page = kv.page
+    prefixes = [np.arange(9, dtype=np.int32),
+                np.arange(9, dtype=np.int32) + 1,
+                np.arange(3, dtype=np.int32)]
+    trace = []
+    for kind, slot, length, pid in ops:
+        if kind == "alloc":
+            if kv._slot_pages[slot]:
+                kv.free(slot)
+            length = min(length, kv.S)
+            # the engine's contract: the prompt fits inside the footprint
+            got = kv.alloc(slot, length, prefix=prefixes[pid][:length])
+            trace.append(("alloc", slot, got is not None,
+                          got if got is not None else -1))
+        elif kind == "free":
+            if kv._slot_pages[slot]:
+                kv.free(slot)
+            trace.append(("free", slot))
+        elif kind == "write" and kv._slot_pages[slot]:
+            # zeros block shaped like a bucket-4 prompt: exercises
+            # prefill_dest's shared/padding scratch-routing
+            L = kv.cfg.num_layers
+            kvh, hd = kv.cfg.num_kv_heads, kv.cfg.resolved_head_dim
+            blk = {"k": jnp.zeros((L, 1, page, kvh, hd), jnp.float32),
+                   "v": jnp.zeros((L, 1, page, kvh, hd), jnp.float32)}
+            kv.write_prefill(slot, blk)
+        if record is not None:
+            record(kv)
+    return trace
+
+
+def _check_invariants(kv):
+    from repro.serve.kvcache import page_kv_bytes
+    owned = [pid for pages in kv._slot_pages for pid in pages]
+    free = [pid for chip in kv._free_chip for pid in chip]
+    # scratch page 0 is never handed out, listed free, or refcounted
+    assert 0 not in owned and 0 not in free
+    assert kv._ref[0] == 0
+    # refcounts == live references; free pages carry no references
+    counts = np.bincount(owned, minlength=kv.P) if owned else \
+        np.zeros(kv.P, np.int64)
+    np.testing.assert_array_equal(kv._ref, counts)
+    assert all(kv._ref[pid] == 0 for pid in free)
+    # no page both free and owned; free+owned partition the usable pool
+    assert set(free).isdisjoint(owned)
+    assert len(free) == len(set(free))
+    assert len(set(free) | set(owned)) == len(free) + len(set(owned))
+    assert set(free) | set(owned) <= set(range(1, kv.P))
+    # every page sits in its owning chip's free list
+    for c, chip in enumerate(kv._free_chip):
+        assert all(pid // kv.pages_per_chip == c for pid in chip)
+    # memory_stats byte math is consistent with the page bookkeeping
+    stats = kv.memory_stats()
+    pb = page_kv_bytes(kv.cfg, kv.page, kv.dtype)
+    assert stats.pages_total == kv.P - 1
+    assert stats.pages_in_use == stats.pages_total - len(free)
+    assert stats.bytes_reserved == stats.pages_in_use * pb
+    assert stats.bytes_total == kv.P * pb
+    assert stats.bytes_per_chip * stats.mesh_chips == stats.bytes_total
+    # shared accounting never exceeds what's owned
+    assert stats.pages_shared <= len(set(owned))
+
+
+@given(ops=alloc_ops_st)
+@settings(max_examples=25, deadline=None)
+def test_paged_alloc_invariants_hold_under_random_op_streams(ops):
+    """Random alloc/write/free/prefix-share sequences: no page owned twice
+    (refcounts == live references), scratch page 0 never allocated, free and
+    owned pages partition the pool, memory_stats byte math consistent —
+    checked after *every* op."""
+    from repro.serve.kvcache import PagedCache
+    kv = PagedCache(_alloc_lm(), 4, 24, dtype=jnp.float32, page_size=4,
+                    num_pages=12)
+    _drive(kv, ops, record=_check_invariants)
+
+
+@given(ops=alloc_ops_st, chips=st.sampled_from([2, 3, 4]))
+@settings(max_examples=25, deadline=None)
+def test_locality_aware_free_list_never_changes_admissions(ops, chips):
+    """The locality-aware (per-chip) free list is a placement hint only:
+    driving the identical op stream against a chip-partitioned pool and a
+    flat pool must produce the identical admit/defer trace *and* identical
+    shared-page credits — placement never leaks into admission control."""
+    from repro.serve.kvcache import PagedCache
+    # num_pages=12 divides 2, 3, and 4, so both pools are the same width
+    flat = PagedCache(_alloc_lm(), 4, 24, dtype=jnp.float32, page_size=4,
+                      num_pages=12)
+    local = PagedCache(_alloc_lm(), 4, 24, dtype=jnp.float32, page_size=4,
+                       num_pages=12, locality_chips=chips)
+    assert flat.P == local.P
+    t_flat = _drive(flat, ops)
+    t_local = _drive(local, ops, record=_check_invariants)
+    assert t_flat == t_local
+    # and the two pools agree on aggregate accounting at the end
+    sf, sl = flat.memory_stats(), local.memory_stats()
+    assert (sf.pages_in_use, sf.bytes_reserved, sf.slots_in_use) == \
+        (sl.pages_in_use, sl.bytes_reserved, sl.slots_in_use)
+
+
 # ---------------------------------------------------------------- storage ----
 
 @given(cap=st.integers(2, 20), n=st.integers(1, 40))
