@@ -7,7 +7,7 @@
 PY ?= python
 
 .PHONY: test test-multidevice test-all smoke bench bench-serve \
-	bench-decode bench-sharded dev-deps
+	bench-decode bench-sharded bench-chunked docs-check dev-deps
 
 # tier-1: the fast single-process suite.  The multi-device subprocess
 # files are split into `test-multidevice` (their own CI job) so this —
@@ -54,6 +54,21 @@ bench-sharded:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src:. \
 	$(PY) -c "from benchmarks import bench_serving; \
 	[print(f'{n},{u:.1f},{d}') for n, u, d in bench_serving.run_sharded()]"
+
+# chunked-prefill benchmark: a long prompt admitted into live decode
+# streams, chunked vs whole-prompt — max inter-token stream gap (min-of-max
+# over repeats), long-request TTFT, decode-stall telemetry, and a bitwise
+# stream-parity assert; JSON lands in benchmarks/out/chunked_prefill.json
+bench-chunked:
+	PYTHONPATH=src:. $(PY) -c "from benchmarks import bench_serving; \
+	[print(f'{n},{u:.1f},{d}') for n, u, d in bench_serving.run_chunked()]"
+
+# documentation gate: every relative link in tracked *.md files must
+# resolve, and docs/telemetry.md must list exactly the metrics the engine
+# registers (tests/test_docs.py re-checks the same contract under pytest)
+docs-check:
+	$(PY) tools/check_docs.py
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_docs.py
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

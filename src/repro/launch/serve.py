@@ -11,6 +11,9 @@ contiguous dense rows via ``--cache-backend contiguous``.
         --num-pages 48   # tight pool: watch admissions defer, not OOM
     python -m repro.launch.serve --decode-impl pallas   # page-table-walking
         # flash-decode kernel: no gathered dense KV transient per step
+    python -m repro.launch.serve --prefill-chunk 16     # chunked prefill:
+        # long prompts interleave with decode, no stream ever stalls on
+        # more than one chunk of prefill compute
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         python -m repro.launch.serve --mesh 4   # sharded paged serving:
         # pools pinned P/4 pages per chip, partial-softmax merged reads
@@ -56,6 +59,19 @@ def main():
                          "flash-decode kernel, O(page) transient; interpret "
                          "mode on CPU, Mosaic on TPU).  Ignored by "
                          "--cache-backend contiguous")
+    ap.add_argument("--prefill-chunk", type=int, default=0, metavar="C",
+                    help="chunked prefill: split admitted prompts into "
+                         "C-token chunks interleaved with fused decode "
+                         "steps (chunk k attends the pages chunks 0..k-1 "
+                         "wrote), claiming pages chunk-by-chunk so a long "
+                         "prompt admits into a pool whose free pages cover "
+                         "only its first chunk.  0 = whole-prompt prefill.  "
+                         "Requires --cache-backend paged; single-device")
+    ap.add_argument("--prefill-budget", type=int, default=0, metavar="T",
+                    help="max prefill tokens per engine iteration "
+                         "(>= one chunk; default: exactly one chunk) — the "
+                         "bound on how long any decode iteration can wait "
+                         "on prefill compute")
     ap.add_argument("--mesh", type=int, default=0, metavar="N",
                     help="sharded paged serving over an N-chip inference "
                          "mesh: the page pool's kv_pages dim shards P/N "
@@ -89,7 +105,9 @@ def main():
                       page_size=args.page_size, num_pages=args.num_pages,
                       prefix_sharing=not args.no_prefix_sharing,
                       decode_impl=args.decode_impl, mesh=mesh,
-                      kv_axis=args.mesh_axis)
+                      kv_axis=args.mesh_axis,
+                      prefill_chunk=args.prefill_chunk,
+                      prefill_budget=args.prefill_budget)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -129,6 +147,13 @@ def main():
         transient = eng.reg.gauge("serve_decode_transient_bytes").get()
         print(f"decode impl [{eng.kv.decode_impl}]: per-step KV read "
               f"transient {transient/1e3:.1f} kB/layer")
+    if args.prefill_chunk:
+        chunks = eng.reg.counter("serve_prefill_chunks_total").get()
+        stalls = eng.reg.counter("serve_prefill_chunk_stalls_total").get()
+        stall_it = eng.reg.counter("serve_decode_stall_iters").get()
+        print(f"chunked prefill [{args.prefill_chunk} tok/chunk, budget "
+              f"{eng.budget}]: {chunks:.0f} chunks, {stalls:.0f} page-grant "
+              f"stalls, decode stall iters={stall_it:.0f}")
 
 
 if __name__ == "__main__":

@@ -453,6 +453,63 @@ def scatter_paged_kv_local(pool, new, page_table, positions, page_offset):
     return flat.reshape(pool.shape)
 
 
+def _scatter_chunk_paged(pool, new, dest):
+    """Chunked-prefill pool write: pool (P,page,KV,D) <- new (B,C,KV,D), the
+    chunk's C tokens landing at ``dest`` (B,C) flat pool rows (page *
+    page_size + row, resolved host-side by ``PagedCache.chunk_dest``).
+    Padding and shared-prefix positions arrive routed to flat index 0 — the
+    scratch sink — whose content is never attended un-masked."""
+    p_pages, page = pool.shape[:2]
+    flat = pool.reshape(p_pages * page, *pool.shape[2:])
+    flat = flat.at[dest.reshape(-1)].set(
+        new.reshape(-1, *new.shape[2:]).astype(pool.dtype))
+    return flat.reshape(pool.shape)
+
+
+def attention_prefill_chunk_block(p, cfg, x, k_pool, v_pool, start_pos, dest,
+                                  page_table, last_pos):
+    """Chunked-prefill attention with prior cache: a (B, C) token chunk at a
+    per-request position offset writes its K/V into the paged pools and
+    attends causally over everything written so far — the pages landed by
+    chunks ``0..k-1`` plus the chunk itself — through the same
+    ``gather_pages`` machinery the paged decode fallback uses.
+
+    x: (B, C, d) chunk activations; start_pos: (B,) global position of each
+    request's chunk start; dest: (B, C) flat pool write indices
+    (``PagedCache.chunk_dest`` — padding/shared positions scratch-routed);
+    page_table: the slots' REAL (B, M) table rows (``PagedCache.table_row``,
+    not the shielded decode view); last_pos: (B,) last valid global position
+    of the chunk — masks padding rows and limits the gather to pages the
+    slot has actually claimed.  Row ``i``'s causal mask is position-exact
+    (``col <= start_pos + i``), so within-chunk causality needs no separate
+    path.  Returns (y, new_k_pool, new_v_pool).
+
+    The math matches whole-prompt dense prefill op-for-op (same einsum
+    contractions, fp32 masked softmax, NEG_INF mask exp-underflowing to
+    exactly 0.0), which is what makes chunked and whole-prompt prefill
+    bitwise-identical token streams rather than merely close ones."""
+    b, c = x.shape[:2]
+    qpos = start_pos[:, None] + jnp.arange(c)[None, :]            # (B, C)
+    q, k, v = project_qkv(p, cfg, x, x, qpos, qpos)
+    k_pool = _scatter_chunk_paged(k_pool, k, dest)
+    v_pool = _scatter_chunk_paged(v_pool, v, dest)
+    kg = gather_pages(k_pool, page_table, last_pos)               # (B,S,KV,D)
+    vg = gather_pages(v_pool, page_table, last_pos)
+    hd = q.shape[-1]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, kg).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    cols = jnp.arange(kg.shape[1])
+    # padding rows (qpos > last_pos) are clamped to last_pos so they never
+    # attend rows beyond claimed pages; their outputs are discarded and
+    # their writes were scratch-routed by dest
+    valid = cols[None, None, :] \
+        <= jnp.minimum(qpos, last_pos[:, None])[:, :, None]       # (B, C, S)
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    y = jnp.einsum("bkgqs,bskd->bqkgd", probs, vg)
+    return output_proj(p, cfg, y), k_pool, v_pool
+
+
 def attention_decode_block(p, cfg, x, k_cache, v_cache, cache_index,
                            rope: bool = True, page_table=None,
                            decode_impl: str = "gather", mesh=None,

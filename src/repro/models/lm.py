@@ -83,6 +83,20 @@ class LM:
                                        decode_impl=decode_impl, mesh=mesh,
                                        kv_axis=kv_axis)
 
+    def prefill_chunk(self, params, tokens, cache, start_pos, dest, last_pos,
+                      scan_layers: bool = True):
+        """One chunk of chunked prefill: forward (B, C) prompt tokens at
+        position offset ``start_pos`` against a paged cache view, scattering
+        K/V into the pools at ``dest`` and attending over prior chunks'
+        pages plus the chunk itself.  Returns (last_logits (B,1,V),
+        new_cache).  See ``transformer.prefill_chunk``."""
+        assert not self.is_encdec, (
+            "chunked prefill is decoder-only (encdec prefill is per-request "
+            "dense state)")
+        return transformer.prefill_chunk(params, self.cfg, tokens, cache,
+                                         start_pos, dest, last_pos,
+                                         scan_layers=scan_layers)
+
     def init_cache(self, batch_size: int, max_seq: int, enc_len: int = 0,
                    dtype=jnp.bfloat16, abstract: bool = False,
                    backend: Optional[str] = None, page_size: int = 16,

@@ -516,3 +516,53 @@ def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
 
     logits = unembed(params, cfg, h)
     return logits, new_cache
+
+
+def prefill_chunk(params, cfg, tokens, cache, start_pos, dest, last_pos,
+                  scan_layers: bool = True):
+    """Chunked prefill with prior cache: forward a (B, C) chunk of prompt
+    tokens at global position offset ``start_pos`` through the stack; each
+    layer scatter-writes the chunk's K/V into the paged pools at ``dest``
+    and attends causally over the cache written by chunks ``0..k-1`` plus
+    the chunk itself (``attention.attention_prefill_chunk_block``).
+
+    ``cache`` is a paged decode-view pytree: per-layer (P,page,KV,D) pools
+    under ``"layers"`` plus a ``"page_table"`` (B, M) entry holding the
+    slots' REAL table rows.  ``last_pos`` (B,) is the last valid global
+    position in the chunk (padding past it is masked and scratch-routed).
+
+    Returns (last_logits (B, 1, V), new_cache): only the hidden row at
+    ``last_pos`` is unembedded — the single row chunked prefill consumes
+    (first-token sampling on the final chunk) — so a chunk pays one vocab
+    projection, not C.  Dense-FFN attention-cache families only: recurrent
+    state has no position-indexed cache to chunk into, and MoE capacity
+    routing (``moe_ffn``'s per-sequence token dropping) depends on the
+    forwarded group shape, so chunk-at-a-time routing would diverge from
+    the whole prompt's."""
+    assert cfg.family in ("dense", "vlm"), (
+        "chunked prefill is dense-FFN attention-cache families only "
+        f"(family={cfg.family})")
+    page_table = cache["page_table"]
+    dtype = jnp.dtype(cfg.dtype)
+    h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dtype)
+    h = constrain(h, ("batch", None, "embed"))
+
+    def body(h, xs):
+        lp, layer_cache = xs
+        a_in = apply_norm(lp["ln1"], h, cfg)
+        a, nk, nv = attn.attention_prefill_chunk_block(
+            lp["attn"], cfg, a_in, layer_cache["k"], layer_cache["v"],
+            start_pos, dest, page_table, last_pos)
+        h = h + a
+        f_in = apply_norm(lp["ln2"], h, cfg)
+        h = h + mlp_mod.mlp(lp["mlp"], cfg, f_in)
+        return h, {"k": nk, "v": nv}
+
+    h, new_layers = _scan_or_unroll(
+        body, h, (params["layers"], cache["layers"]), cfg.num_layers,
+        scan_layers)
+    # slice the one consumed row before unembedding
+    take = (last_pos - start_pos).astype(jnp.int32)               # (B,)
+    h_last = jnp.take_along_axis(h, take[:, None, None], axis=1)  # (B,1,d)
+    logits = unembed(params, cfg, h_last)
+    return logits, {"layers": new_layers, "page_table": page_table}

@@ -36,6 +36,24 @@ regime of Figs 5/6/8.  Design:
   length bucket and each group runs as a *single* ``lm.forward`` call whose
   K/V block is scatter-written into every admitted slot's cache rows/pages
   in the same device call (one dispatch per group, not per request).
+* **Chunked prefill** (``prefill_chunk=C``): instead of prefilling a whole
+  prompt in one bucketed call — which stalls every in-flight decode stream
+  for the prompt's full forward — admitted prompts split into fixed-size
+  C-token chunks that interleave with the fused decode steps: each engine
+  iteration spends at most ``prefill_budget`` tokens (default: one chunk)
+  on prefill before running decode, so no decode iteration ever waits on
+  more than one chunk of prefill compute.  Chunk *k* attends causally over
+  the pages written by chunks ``0..k-1`` at a position offset
+  (``lm.prefill_chunk``), pages are claimed chunk-by-chunk
+  (``PagedCache.alloc_chunked``/``extend`` — banker-safe, so a long prompt
+  admits into a pool whose free pages cover only its first chunk, and a
+  mid-prefill stall defers the chunk rather than deadlocking), and
+  mid-prefill slots are excluded from the fused dispatch's ``active`` mask
+  with their page-table rows shielded to scratch until the last chunk
+  lands.  Page-aware by construction: paged backend only, single-device
+  (the sharded pool's per-chip chunk scatter is a ROADMAP follow-on), and
+  dense-FFN families only — MoE capacity routing depends on the forwarded
+  group shape, so chunk-at-a-time routing would break stream parity.
 * **On-device sampling**: greedy / temperature / top-k / top-p run as a
   vectorized kernel (``repro.serve.sampling``) fused into the decode
   dispatch.  The only host transfer per iteration is the (B,) vector of
@@ -78,6 +96,14 @@ class SamplingParams:
     top_k: int = 0                   # 0 => no top-k filter
     top_p: float = 1.0               # nucleus
     seed: int = 0
+
+
+@dataclass
+class _PrefillState:
+    """A slot mid-chunked-prefill: resumable across engine iterations."""
+    req: Request
+    done: int = 0            # prompt positions landed so far
+    shared: int = 0          # leading positions backed by shared pages
 
 
 @dataclass
@@ -135,7 +161,8 @@ class ServeEngine:
                  num_pages: Optional[int] = None,
                  prefix_sharing: bool = True,
                  decode_impl: str = "gather",
-                 mesh=None, kv_axis: str = "model"):
+                 mesh=None, kv_axis: str = "model",
+                 prefill_chunk: int = 0, prefill_budget: int = 0):
         # per-slot positions rely on masked-then-overwritten cache writes,
         # which holds for attention KV caches but not recurrent state
         assert lm.cfg.family in ("dense", "moe", "vlm"), (
@@ -158,6 +185,43 @@ class ServeEngine:
                                 prefix_sharing=prefix_sharing,
                                 decode_impl=decode_impl, mesh=mesh,
                                 kv_axis=kv_axis)
+        # chunked prefill: C-token chunks interleaved with decode, at most
+        # `budget` prefill tokens per engine iteration (0 = whole-prompt)
+        self.chunk = int(prefill_chunk)
+        self.budget = int(prefill_budget) or self.chunk
+        if prefill_budget and not self.chunk:
+            raise ValueError(
+                "prefill_budget bounds *chunked* prefill per iteration; "
+                "without prefill_chunk the whole prompt lands in one "
+                "dispatch and no budget applies (set prefill_chunk)")
+        if self.chunk:
+            if cache_backend != "paged":
+                raise ValueError(
+                    "chunked prefill is page-aware: chunks claim pages "
+                    "incrementally and mid-prefill slots shield their table "
+                    "rows from decode (use cache_backend='paged')")
+            if mesh is not None:
+                raise ValueError(
+                    "chunked prefill under a kv_pages-sharded pool needs the "
+                    "per-chip mode='drop' chunk scatter (ROADMAP follow-on); "
+                    "serve single-device or disable chunking")
+            if self.img_len:
+                raise ValueError(
+                    "chunked prefill covers token prompts; VLM image-embed "
+                    "prefixes prefill whole-prompt")
+            if lm.cfg.family == "moe":
+                raise ValueError(
+                    "chunked prefill would change MoE expert-capacity "
+                    "routing: moe_ffn computes capacity and token dropping "
+                    "per forwarded sequence, so a (1, C) chunk routes "
+                    "differently than the whole bucketed prompt and the "
+                    "bitwise stream-parity contract breaks; MoE prompts "
+                    "prefill whole-prompt")
+            if self.chunk < 1 or self.budget < self.chunk:
+                raise ValueError(
+                    f"prefill budget {self.budget} below one chunk "
+                    f"({self.chunk}): no chunk could ever dispatch")
+        self.prefilling: dict = {}           # slot -> _PrefillState (FIFO)
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int32)   # next write index
         self.queue: List[Request] = []
@@ -177,6 +241,44 @@ class ServeEngine:
         self._fused = jax.jit(self._make_fused(), static_argnums=(11,),
                               donate_argnums=(2,))
         self._prefill = jax.jit(self._make_prefill(), donate_argnums=(3,))
+        if self.chunk:
+            self._chunk_step = jax.jit(self._make_chunk(),
+                                       donate_argnums=(2,))
+        self._declare_metrics()
+
+    def _declare_metrics(self):
+        """Eagerly register every metric the engine can emit, with help
+        text, so the observability surface is complete from iteration zero
+        (dashboards see zero-valued series instead of gaps) and
+        ``docs/telemetry.md`` can be verified against the registry by a test
+        (tests/test_docs.py) rather than by hand."""
+        c, g, h = self.reg.counter, self.reg.gauge, self.reg.histogram
+        c("serve_requests_total", "requests accepted by submit()")
+        c("serve_admission_deferred_total",
+          "admissions deferred by page-pool admission control")
+        c("serve_prefill_dispatches_total",
+          "prefill device dispatches (bucketed groups + chunks)")
+        c("serve_prefill_tokens_total", "prompt tokens prefilled")
+        c("serve_prefill_chunks_total", "chunked-prefill chunk dispatches")
+        c("serve_prefill_chunk_stalls_total",
+          "prefill chunks deferred because a page grant was not banker-safe")
+        c("serve_decode_stall_iters",
+          "iterations where live decode streams waited on prefill work "
+          "exceeding the per-iteration budget")
+        c("serve_decode_dispatches_total", "fused decode+sample dispatches")
+        c("serve_iterations_total", "engine iterations")
+        c("serve_tokens_total", "tokens emitted by finished requests")
+        h("serve_ttft_seconds", "submit-to-first-token latency")
+        h("serve_latency_seconds", "submit-to-completion latency")
+        h("serve_prefill_batch_size",
+          "requests covered by one bucketed prefill dispatch",
+          buckets=(1, 2, 4, 8, 16, 32, 64, float("inf")))
+        g("serve_kv_pages_in_use", "physical KV pages reserved by live slots")
+        g("serve_kv_bytes_reserved", "cache bytes reserved by live slots")
+        g("serve_kv_pages_shared", "pages with refcount > 1 (prefix sharing)")
+        g("serve_kv_bytes_per_chip", "pinned cache bytes per mesh chip")
+        g("serve_decode_transient_bytes",
+          "per-step transient of the paged KV read path, one layer")
 
     # ---------------------------------------------------------- jit builds ----
     def _make_fused(self):
@@ -235,6 +337,28 @@ class ServeEngine:
 
         return run
 
+    def _make_chunk(self):
+        """One chunked-prefill device call: forward a (1, C) chunk against
+        the slot's pages (``lm.prefill_chunk`` — scatter + prior-cache
+        attention), and sample a would-be first token from the chunk's last
+        valid row.  The sampled token is consumed only when this was the
+        prompt's final chunk; computing it unconditionally keeps the trace
+        count at one.  jit caches exactly one trace: every chunk is padded
+        to the fixed chunk length."""
+        lm, vocab = self.lm, self.lm.cfg.vocab_size
+
+        def run(params, tokens, layers, page_row, dest, start_pos, last_pos,
+                temps, top_ks, top_ps, seeds):
+            cache = {"layers": layers, "page_table": page_row}
+            logits, cache = lm.prefill_chunk(params, tokens, cache,
+                                             start_pos, dest, last_pos)
+            rows = logits[:, -1, :vocab].astype(jnp.float32)
+            toks = sample_batch(rows, temps, top_ks, top_ps, seeds,
+                                jnp.zeros((tokens.shape[0],), jnp.int32))
+            return toks, cache["layers"]
+
+        return run
+
     # ------------------------------------------------------------- intake ----
     def submit(self, req: Request):
         if len(req.prompt) == 0:
@@ -278,6 +402,9 @@ class ServeEngine:
         is committed; if the page pool cannot cover it, admission stops (no
         head-of-line skipping) and the request waits for running slots to
         finish and free pages."""
+        if self.chunk:
+            self._admit_chunked()
+            return
         free = self._free_slots()
         admitted = []                 # (slot, req, bucket, shared_len)
         while free and self.queue:
@@ -302,6 +429,107 @@ class ServeEngine:
                 bucket, [a for a in admitted if a[2] == bucket])
         if admitted:
             self._export_memory()
+
+    def _admit_chunked(self):
+        """Chunked admission (FIFO, no head-of-line skipping): the head
+        request claims only its first chunk's pages (``kv.alloc_chunked`` —
+        banker-safe incremental allocation), takes a slot with the decode
+        shield up, and joins ``self.prefilling``; its chunks dispatch from
+        ``_run_prefill_chunks`` starting this same iteration.  A request
+        whose first-chunk grant is not safe yet defers exactly like
+        whole-prompt admission control."""
+        free = self._free_slots()
+        admitted = False
+        while free and self.queue:
+            req = self.queue[0]
+            first = min(self.chunk, len(req.prompt))
+            shared = self.kv.alloc_chunked(free[0], self._footprint(req),
+                                           first, prefix=req.prompt)
+            if shared is None:
+                self.reg.counter("serve_admission_deferred_total").inc()
+                break
+            slot = free.pop(0)
+            self.queue.pop(0)
+            self.slot_req[slot] = req
+            self.active[slot] = False            # not decodable yet
+            self.kv.set_decode_shield(slot, True)
+            self.prefilling[slot] = _PrefillState(req=req, shared=shared)
+            admitted = True
+        if admitted:
+            self._export_memory()
+
+    def _run_prefill_chunks(self, budget: int, skip=()):
+        """Dispatch up to ``budget`` tokens of prefill chunks, oldest
+        admission first (dict order = admission order).  Each chunk first
+        ``extend``s the slot's pages to cover its end — the *final* chunk
+        extends to the full footprint, claiming the decode tail — and a
+        chunk whose grant is not banker-safe stalls (the slot resumes in a
+        later iteration once completions free pages; later admissions may
+        keep chunking meanwhile).  When a slot's last chunk lands it is
+        unshielded, marked active with the sampled first token pending, and
+        decodes in this same iteration's fused dispatch.  Returns (budget
+        tokens consumed, slots that stalled) — ``skip`` lets the second
+        same-iteration pass avoid re-stalling slots the first already
+        counted."""
+        landed = spent = 0
+        stalled: set = set()
+        if not self.prefilling:
+            return spent, stalled
+        for slot in list(self.prefilling):
+            if slot in skip:
+                continue
+            st = self.prefilling[slot]
+            req, plen = st.req, len(st.req.prompt)
+            while budget >= self.chunk and st.done < plen:
+                end = min(st.done + self.chunk, plen)
+                final = end == plen
+                cover = self._footprint(req) if final else end
+                if not self.kv.extend(slot, cover):
+                    self.reg.counter(
+                        "serve_prefill_chunk_stalls_total").inc()
+                    stalled.add(slot)
+                    break                    # defer-and-resume, not deadlock
+                tokens = np.zeros((1, self.chunk), np.int32)
+                tokens[0, :end - st.done] = req.prompt[st.done:end]
+                dest = self.kv.chunk_dest(slot, st.done, end, self.chunk,
+                                          st.shared)
+                sp = req.sampling
+                toks, new_layers = self._chunk_step(
+                    self.params, jnp.asarray(tokens),
+                    self.kv.state["layers"],
+                    jnp.asarray(self.kv.table_row(slot)[None]),
+                    jnp.asarray(dest[None]),
+                    jnp.asarray([st.done], jnp.int32),
+                    jnp.asarray([end - 1], jnp.int32),
+                    jnp.asarray([sp.temperature], jnp.float32),
+                    jnp.asarray([sp.top_k], jnp.int32),
+                    jnp.asarray([sp.top_p], jnp.float32),
+                    jnp.asarray([sp.seed], jnp.int32))
+                self.kv.update({**self.kv.state, "layers": new_layers})
+                self.kv.register_landed(slot, req.prompt, end)
+                self.reg.counter("serve_prefill_chunks_total").inc()
+                self.reg.counter("serve_prefill_dispatches_total").inc()
+                self.reg.counter("serve_prefill_tokens_total").inc(
+                    end - st.done)
+                budget -= self.chunk
+                spent += self.chunk
+                landed += end - st.done
+                st.done = end
+                if final:
+                    del self.prefilling[slot]
+                    self.kv.set_decode_shield(slot, False)
+                    self.slot_pos[slot] = plen
+                    self.next_token[slot] = int(np.asarray(toks)[0])
+                    self.active[slot] = True
+                    self.temps[slot] = sp.temperature
+                    self.top_ks[slot] = sp.top_k
+                    self.top_ps[slot] = sp.top_p
+                    self.seeds[slot] = sp.seed
+            if budget < self.chunk:
+                break
+        if landed:
+            self._export_memory()
+        return spent, stalled
 
     def _prefill_group(self, bucket: int, group):
         """One ``lm.forward`` dispatch for every admitted request in this
@@ -356,18 +584,44 @@ class ServeEngine:
             self.reg.counter("serve_prefill_tokens_total").inc(
                 len(req.prompt))
         self.reg.counter("serve_prefill_dispatches_total").inc()
-        self.reg.histogram("serve_prefill_batch_size",
-                           buckets=(1, 2, 4, 8, 16, 32, 64, float("inf"))
-                           ).observe(n)
+        # buckets fixed by the eager _declare_metrics registration
+        self.reg.histogram("serve_prefill_batch_size").observe(n)
 
     # ------------------------------------------------------------- decode ----
     def step(self):
-        """One engine iteration: admit, then **one** fused decode+sample
-        dispatch for all active slots at their own positions."""
-        self._admit()
-        active_idx = [i for i, r in enumerate(self.slot_req) if r is not None]
+        """One engine iteration: admit (+ up to one budget's worth of
+        prefill chunks), then **one** fused decode+sample dispatch for all
+        active slots at their own positions.
+
+        ``serve_decode_stall_iters`` counts iterations where live decode
+        streams waited on more prefill tokens than the per-iteration budget
+        allows — zero by construction with chunking on; in whole-prompt mode
+        there is no budget, so every prefill dispatched alongside live
+        decode streams counts as a stall."""
+        streams_waiting = bool(np.any(self.active))
+        pf0 = self.reg.counter("serve_prefill_tokens_total").get()
+        if self.chunk:
+            # resume in-flight chunked prefills BEFORE admitting new work:
+            # a stalled slot gets first claim on pages freed since last
+            # iteration, so sustained short-request traffic can slow a
+            # mid-prefill long prompt but never starve it
+            spent, stalled = self._run_prefill_chunks(self.budget)
+            self._admit()
+            if spent < self.budget:
+                # leftover budget covers a fresh admission's first chunk in
+                # the same iteration (skip already-stalled slots: the pages
+                # they need did not appear mid-iteration)
+                self._run_prefill_chunks(self.budget - spent, skip=stalled)
+        else:
+            self._admit()
+        pf_tokens = self.reg.counter("serve_prefill_tokens_total").get() - pf0
+        if streams_waiting and pf_tokens > (self.budget if self.chunk else 0):
+            self.reg.counter("serve_decode_stall_iters").inc()
+        active_idx = [i for i, r in enumerate(self.slot_req)
+                      if r is not None and i not in self.prefilling]
         if not active_idx:
-            return False
+            # mid-prefill slots are still work in flight
+            return bool(self.prefilling)
         # per-slot sample-step index: the token being sampled now is
         # out_tokens[len]+1 deep in the request's stream (the pending token,
         # sampled earlier, is #len and gets emitted this iteration)

@@ -25,6 +25,20 @@ slots' page-table rows point, so the fused decode's masked scatter-writes
 for inactive slots land in garbage space rather than in pages that may since
 have been reallocated to another request.
 
+**Chunked-prefill allocation** (``alloc_chunked`` / ``extend``): a long
+prompt admitted for chunked prefill takes only the pages its *first* chunk
+writes; every later chunk claims its pages just before it dispatches, and
+the final chunk claims the decode pages.  Admission and every grant run a
+banker-style single-resource safety check — the live slots (each with its
+remaining page need and the pages it would return on completion) must still
+be completable in *some* order — so a partially-prefilled slot can stall
+(``extend`` returns ``False``; the engine defers the chunk and resumes when
+pages free) but can never deadlock the pool.  Mid-prefill slots are
+**shielded** (``set_decode_shield``): ``decode_view`` hands the fused decode
+dispatch a table whose shielded rows point at scratch, so the masked decode
+write for a slot that is still prefilling can never land in its own live
+pages.
+
 Device-side state stays a plain pytree (``decode_view()``) so the engine's
 one-fused-dispatch-per-iteration invariant from PR 1 is untouched: the page
 table rides into ``lm.decode_step`` as just another (B, M) int32 argument.
@@ -307,6 +321,11 @@ class PagedCache:
         self._page_to_hash: Dict[int, bytes] = {}
         self._slot_pages: List[List[int]] = [[] for _ in range(batch)]
         self._slot_shared: List[int] = [0] * batch   # leading shared pages
+        # chunked-prefill bookkeeping: pages a slot has been promised but has
+        # not yet claimed (drawn down by ``extend``), and slots whose table
+        # rows are hidden from the fused decode dispatch while they prefill
+        self._slot_need: List[int] = [0] * batch
+        self._shielded: set = set()
 
     # ------------------------------------------------------------ sizing ----
     def pages_needed(self, length: int) -> int:
@@ -341,19 +360,49 @@ class PagedCache:
         assert len(out) == need, (len(out), need)
         return out
 
-    def alloc(self, slot: int, length: int,
-              prefix: Optional[np.ndarray] = None) -> Optional[int]:
-        """Reserve pages covering ``length`` positions for ``slot``.
+    def _banker_items(self, skip: Optional[int] = None):
+        """(remaining_need, freeable_on_completion) per live slot — the state
+        the single-resource banker's check runs over.  ``freeable`` counts
+        only exclusively-owned pages (refcount 1): shared pages may outlive
+        the slot, so counting them would overestimate what completion frees
+        (conservative — may defer a grant that was in fact safe, never the
+        reverse)."""
+        items = []
+        for s in range(self.B):
+            if s == skip or (not self._slot_pages[s]
+                             and not self._slot_need[s]):
+                continue
+            freeable = sum(int(self._ref[p] == 1) for p in self._slot_pages[s])
+            items.append((self._slot_need[s], freeable))
+        return items
 
-        ``prefix``: the slot's prompt tokens starting at position 0 — the
-        key for prefix sharing (pass ``None`` to disable for this request,
-        e.g. VLM prompts whose leading positions are image embeddings).
-        Returns the number of leading positions backed by shared pages, or
-        ``None`` when the free pool cannot cover the unshared remainder.
-        """
-        assert not self._slot_pages[slot], f"slot {slot} already allocated"
-        assert 0 < length <= self.S, (length, self.S)
-        n_pages = self.pages_needed(length)
+    @staticmethod
+    def _safe(free: int, items) -> bool:
+        """Single-resource banker's safety: the live slots are completable in
+        *some* order iff, walking them by ascending remaining need, each
+        one's need fits in the free pool grown by its predecessors' frees."""
+        for need, freeable in sorted(items):
+            if need > free:
+                return False
+            free += freeable
+        return True
+
+    def _grant_safe(self, take: int, remaining: int, skip: Optional[int] = None,
+                    extra_freeable: int = 0) -> bool:
+        """Would handing out ``take`` fresh pages to a slot that will still
+        need ``remaining`` more leave the pool in a banker-safe state?
+        ``skip``/``extra_freeable`` describe the grantee: its current entry is
+        excluded and re-added post-grant with ``take`` more freeable pages."""
+        free = self._free_count()
+        if take > free:
+            return False
+        items = self._banker_items(skip=skip)
+        items.append((remaining, take + extra_freeable))
+        return self._safe(free - take, items)
+
+    def _match_shared(self, prefix: Optional[np.ndarray], n_pages: int):
+        """Leading full prompt pages already registered (content landed) that
+        this request can share.  Returns (shared page ids, full-page count)."""
         shared: List[int] = []
         full = 0
         if self.prefix_sharing and prefix is not None:
@@ -365,10 +414,34 @@ class PagedCache:
                 if pid is None:
                     break
                 shared.append(pid)
-        if n_pages - len(shared) > self._free_count():
-            return None                      # admission control, not OOM
+        return shared, full
+
+    def alloc(self, slot: int, length: int,
+              prefix: Optional[np.ndarray] = None) -> Optional[int]:
+        """Reserve pages covering ``length`` positions for ``slot``.
+
+        ``prefix``: the slot's prompt tokens starting at position 0 — the
+        key for prefix sharing (pass ``None`` to disable for this request,
+        e.g. VLM prompts whose leading positions are image embeddings).
+        Returns the number of leading positions backed by shared pages, or
+        ``None`` when the free pool cannot cover the unshared remainder (or
+        covering it would strand an in-flight chunked prefill — the banker's
+        check below degrades to the plain ``need <= free`` test whenever no
+        chunked slot is live).
+        """
+        assert not self._slot_pages[slot], f"slot {slot} already allocated"
+        assert 0 < length <= self.S, (length, self.S)
+        n_pages = self.pages_needed(length)
+        shared, full = self._match_shared(prefix, n_pages)
+        # bump shared refs before the safety check: a page going ref 1 -> 2
+        # stops being freeable by its first owner's completion, and the
+        # banker must see that (rolled back on deferral)
         for pid in shared:
             self._ref[pid] += 1
+        if not self._grant_safe(n_pages - len(shared), 0):
+            for pid in shared:
+                self._ref[pid] -= 1
+            return None                      # admission control, not OOM
         fresh = self._take_fresh(n_pages - len(shared))
         for pid in fresh:
             self._ref[pid] = 1
@@ -388,6 +461,92 @@ class PagedCache:
         self._slot_shared[slot] = len(shared)
         return len(shared) * self.page
 
+    # ------------------------------------------------- chunked allocation ----
+    def alloc_chunked(self, slot: int, length: int, first: int,
+                      prefix: Optional[np.ndarray] = None) -> Optional[int]:
+        """Admit ``slot`` for chunked prefill: claim only the pages covering
+        the first ``first`` positions now; the rest of the ``length``-position
+        footprint (later prompt chunks + the decode tail) is recorded as this
+        slot's *remaining need* and claimed chunk-by-chunk via ``extend``.
+
+        Admission requires the post-grant pool to be banker-safe, which is a
+        strictly weaker demand than the whole-footprint ``alloc`` check: a
+        long prompt can be admitted into a pool whose free pages cover only
+        its first chunk, as long as the live slots' completions will free
+        what its later chunks need.  Prefix sharing matches only pages whose
+        content has already *landed* (``register_landed`` keys pages after
+        their chunk's scatter, not at alloc time), so a sharer can never
+        attend a page another request has not written yet.
+
+        Returns the shared leading positions, or ``None`` to defer."""
+        assert not self._slot_pages[slot], f"slot {slot} already allocated"
+        assert 0 < first <= length <= self.S, (first, length, self.S)
+        n_total = self.pages_needed(length)
+        shared, _ = self._match_shared(prefix, n_total)
+        n_first = max(self.pages_needed(first) - len(shared), 0)
+        remaining = n_total - len(shared) - n_first
+        for pid in shared:          # pre-check bump, as in ``alloc``
+            self._ref[pid] += 1
+        if not self._grant_safe(n_first, remaining):
+            for pid in shared:
+                self._ref[pid] -= 1
+            return None
+        fresh = self._take_fresh(n_first)
+        for pid in fresh:
+            self._ref[pid] = 1
+        pages = shared + fresh
+        self.page_table[slot, :] = 0
+        self.page_table[slot, :len(pages)] = pages
+        self._page_table_dev = None
+        self._slot_pages[slot] = pages
+        self._slot_shared[slot] = len(shared)
+        self._slot_need[slot] = remaining
+        return len(shared) * self.page
+
+    def extend(self, slot: int, cover: int) -> bool:
+        """Grow ``slot``'s claimed pages to cover ``cover`` positions (the
+        next chunk's end — or the full footprint on the final chunk, which
+        claims the decode tail).  Returns ``False`` when the grant is not
+        banker-safe right now: the chunk defers and resumes once completions
+        free pages — the safety invariant guarantees some live slot can
+        always run to completion, so a stalled prefill never deadlocks."""
+        have = len(self._slot_pages[slot])
+        assert have > 0, f"slot {slot} has no chunked allocation"
+        need = self.pages_needed(cover) - have
+        if need <= 0:
+            return True
+        assert need <= self._slot_need[slot], (need, self._slot_need[slot])
+        freeable = sum(int(self._ref[p] == 1) for p in self._slot_pages[slot])
+        if not self._grant_safe(need, self._slot_need[slot] - need,
+                                skip=slot, extra_freeable=freeable):
+            return False
+        fresh = self._take_fresh(need)
+        for pid in fresh:
+            self._ref[pid] = 1
+        self.page_table[slot, have:have + need] = fresh
+        self._page_table_dev = None
+        self._slot_pages[slot].extend(fresh)
+        self._slot_need[slot] -= need
+        return True
+
+    def register_landed(self, slot: int, prefix: np.ndarray,
+                        upto: int) -> None:
+        """Key ``slot``'s full prompt pages whose content has landed
+        (positions ``[0, upto)`` scattered) into the prefix-sharing registry.
+        Chunked prefill registers here — after the chunk's scatter — instead
+        of at alloc time, so no other request can ever map a page whose
+        content is still pending.  Idempotent per page."""
+        if not self.prefix_sharing or prefix is None:
+            return
+        full = min(upto, len(prefix)) // self.page
+        pages = self._slot_pages[slot]
+        for i in range(self._slot_shared[slot], min(full, len(pages))):
+            key = self._key(prefix, i)
+            pid = pages[i]
+            if key not in self._hash_to_page and pid not in self._page_to_hash:
+                self._hash_to_page[key] = pid
+                self._page_to_hash[pid] = key
+
     def _key(self, prefix: np.ndarray, page_idx: int) -> bytes:
         # K/V in page i depend on tokens[: (i+1)*page] (causality), nothing
         # else — so the prefix bytes are the complete sharing key
@@ -402,13 +561,29 @@ class PagedCache:
         Positions already backed by shared pages, and padding positions
         beyond ``valid_len``, route to flat index 0 (scratch page row 0) —
         the block is computed for the padded bucket but only privately-owned
-        real positions land in the pool.
+        real positions land in the pool.  (The position-0 special case of
+        ``chunk_dest`` — one implementation of the resolve+mask pipeline.)
         """
-        pos = np.arange(block_len)
+        return self.chunk_dest(slot, 0, valid_len, block_len, shared_len)
+
+    def chunk_dest(self, slot: int, start: int, end: int, chunk_len: int,
+                   shared_len: int = 0) -> np.ndarray:
+        """Flat pool indices for one prefill chunk: global positions
+        ``[start, start + chunk_len)`` of ``slot``, of which only
+        ``[max(start, shared_len), end)`` actually land (padding past the
+        chunk's valid tokens and positions backed by shared pages route to
+        flat index 0, the scratch sink).  The caller must have ``extend``-ed
+        the slot to cover ``end`` positions first."""
+        pos = start + np.arange(chunk_len)
         logical = np.minimum(pos // self.page, self.max_pages - 1)
         idx = self.page_table[slot, logical] * self.page + pos % self.page
-        write = (pos >= shared_len) & (pos < valid_len)
+        write = (pos >= shared_len) & (pos < end)
         return np.where(write, idx, 0).astype(np.int32)
+
+    def table_row(self, slot: int) -> np.ndarray:
+        """The slot's REAL (M,) page-table row — what a chunked-prefill
+        dispatch gathers through (``decode_view`` may be shielding it)."""
+        return self.page_table[slot].copy()
 
     def staged_write_prefill(self, layers, kv_block, dest):
         """Jit-stageable multi-request prefill scatter over the per-layer
@@ -441,15 +616,37 @@ class PagedCache:
                                                         jnp.int32))}
 
     # ------------------------------------------------------------ decode ----
+    def set_decode_shield(self, slot: int, shielded: bool) -> None:
+        """Hide/expose ``slot``'s table row in ``decode_view``.
+
+        A mid-prefill slot owns live pages but must not take decode traffic:
+        the fused dispatch scatter-writes *every* slot (masked ones at
+        position 0), and position 0 of a prefilling slot maps to its real
+        first page — the write would corrupt prefilled content.  Shielded
+        rows read as all-scratch in the decode view, so both the masked
+        write and the (already inactive-masked) read land in garbage space.
+        Chunk dispatches bypass the shield via ``table_row``."""
+        if shielded:
+            self._shielded.add(slot)
+        else:
+            self._shielded.discard(slot)
+        self._page_table_dev = None
+
     def decode_view(self):
         """Device pytree for ``lm.decode_step``: pools + the page table.
 
         The table is a plain (B, M) int32 input to the fused dispatch — its
         shape never changes, so admits/frees never retrace the decode; and
         its device copy is cached between mutations, so steady-state decode
-        (no admits, no completions) pays no host->device transfer for it."""
+        (no admits, no completions) pays no host->device transfer for it.
+        Rows of shielded (mid-chunked-prefill) slots are zeroed to the
+        scratch page (see ``set_decode_shield``)."""
         if self._page_table_dev is None:
-            self._page_table_dev = jnp.asarray(self.page_table)
+            tbl = self.page_table
+            if self._shielded:
+                tbl = tbl.copy()
+                tbl[sorted(self._shielded)] = 0
+            self._page_table_dev = jnp.asarray(tbl)
         return {**self.state, "page_table": self._page_table_dev}
 
     def update(self, new_state) -> None:
@@ -466,6 +663,8 @@ class PagedCache:
                 self._free_chip[pid // self.pages_per_chip].append(pid)
         self._slot_pages[slot] = []
         self._slot_shared[slot] = 0
+        self._slot_need[slot] = 0
+        self._shielded.discard(slot)
         self.page_table[slot, :] = 0    # point the freed slot at scratch
         self._page_table_dev = None
 

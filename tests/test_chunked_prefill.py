@@ -1,0 +1,354 @@
+"""Chunked prefill interleaved with decode: token-stream parity with
+whole-prompt prefill, the bounded-stall guarantee, and page-aware
+incremental allocation (banker-safe admission, chunk-time stall/resume,
+decode shielding).
+
+The correctness bar mirrors the paged-cache one: chunking is a *scheduling*
+change, so a chunked engine must emit bitwise-identical token streams to a
+whole-prompt engine for every chunk size — including chunks that equal the
+prefill bucket and chunks that don't divide the prompt length — while never
+letting a decode iteration wait on more than one budget's worth of prefill
+compute."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS
+from repro.models import LM, ForwardOpts
+from repro.serve import Request, ServeEngine
+
+
+def small_lm(name="llama3.2-3b", layers=2):
+    cfg = dataclasses.replace(CONFIGS[name].reduced(), dtype="float32",
+                              num_layers=layers)
+    lm = LM(cfg)
+    return cfg, lm, lm.init(jax.random.key(0))
+
+
+def cache_only_lm(name="llama3.2-3b", layers=2):
+    """LM without params — for host-side allocator tests (no dispatches)."""
+    cfg = dataclasses.replace(CONFIGS[name].reduced(), dtype="float32",
+                              num_layers=layers)
+    return cfg, LM(cfg)
+
+
+def _streams(eng):
+    return sorted((r.id, tuple(r.out_tokens)) for r in eng.finished)
+
+
+# ------------------------------------------------- token-stream parity ----
+
+def test_chunked_stream_parity_across_chunk_sizes():
+    """Chunk sizes 4 (== the bucket of the length-4 prompt), 5 (divides no
+    prompt length), and 16 (== the bucket of the length-16 prompt, and
+    bigger than most prompts) must all emit exactly the whole-prompt
+    engine's greedy streams."""
+    cfg, lm, params = small_lm()
+    rng = np.random.default_rng(5)
+    lens = [4, 7, 16, 23, 5, 12]
+    reqs = [(i, rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+             int(rng.integers(3, 7))) for i, n in enumerate(lens)]
+
+    def run(**kw):
+        eng = ServeEngine(lm, params, max_batch=4, max_seq=64,
+                          cache_backend="paged", page_size=8, **kw)
+        for i, p, n in reqs:
+            eng.submit(Request(i, p.copy(), max_new_tokens=n))
+        eng.run_until_drained()
+        return eng
+
+    base = run()
+    for chunk in (4, 5, 16):
+        eng = run(prefill_chunk=chunk)
+        assert _streams(eng) == _streams(base), f"divergence at chunk={chunk}"
+        assert len(eng.finished) == len(lens)
+        # every prompt really went through the chunk path
+        expect = sum(-(-n // chunk) for n in lens)
+        assert eng.reg.counter("serve_prefill_chunks_total").get() == expect
+        assert eng.reg.counter("serve_decode_stall_iters").get() == 0
+        st = eng.kv.memory_stats()
+        assert st.pages_in_use == 0 and st.slots_in_use == 0
+
+
+def test_chunked_prefill_logits_bitwise_match_whole_prompt():
+    """lm-level exactness: landing a prompt through lm.prefill_chunk in
+    uneven chunks must leave the paged pools in a state whose decode logits
+    — and whose final-chunk sampling row — are bitwise identical to
+    whole-prompt prefill (dense attention, the serving default)."""
+    cfg, lm, params = small_lm()
+    S, page, plen, chunk = 32, 4, 14, 6
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+    opts = ForwardOpts(attn_impl="dense", remat="none")
+
+    whole = lm.init_cache(1, S, dtype=jnp.float32, backend="paged",
+                          page_size=page)
+    assert whole.alloc(0, plen + 4, prefix=prompt) == 0
+    logits_full, _, pc = lm.forward(
+        params, {"tokens": jnp.asarray(prompt[None])}, opts,
+        collect_cache=True)
+    whole.write_prefill(0, pc["layers"])
+
+    chunked = lm.init_cache(1, S, dtype=jnp.float32, backend="paged",
+                            page_size=page)
+    assert chunked.alloc_chunked(0, plen + 4, first=min(chunk, plen),
+                                 prefix=prompt) == 0
+    done, last_logits = 0, None
+    while done < plen:
+        end = min(done + chunk, plen)
+        cover = plen + 4 if end == plen else end
+        assert chunked.extend(0, cover)
+        tokens = np.zeros((1, chunk), np.int32)
+        tokens[0, :end - done] = prompt[done:end]
+        cache = {"layers": chunked.state["layers"],
+                 "page_table": jnp.asarray(chunked.table_row(0)[None])}
+        last_logits, cache = lm.prefill_chunk(
+            params, jnp.asarray(tokens), cache,
+            jnp.asarray([done], jnp.int32),
+            jnp.asarray(chunked.chunk_dest(0, done, end, chunk)[None]),
+            jnp.asarray([end - 1], jnp.int32))
+        chunked.update({**chunked.state, "layers": cache["layers"]})
+        done = end
+    # the final chunk's sampling row == the whole forward's last prompt row
+    np.testing.assert_array_equal(np.asarray(last_logits[:, -1]),
+                                  np.asarray(logits_full[:, plen - 1]))
+    # and the pools decode identically from here on
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 1)), jnp.int32)
+    pos = jnp.asarray([plen], jnp.int32)
+    lw, _ = lm.decode_step(params, tok, whole.decode_view(), pos)
+    lc, _ = lm.decode_step(params, tok, chunked.decode_view(), pos)
+    np.testing.assert_array_equal(np.asarray(lw), np.asarray(lc))
+
+
+# ------------------------------------------------------- bounded stall ----
+
+def test_long_admission_never_stalls_decode_streams():
+    """While a long prompt chunk-prefills, every live decode stream must
+    emit exactly one token per engine iteration — the fused-step cadence
+    a whole-prompt admission provably breaks (its serve_decode_stall_iters
+    fires)."""
+    cfg, lm, params = small_lm()
+    rng = np.random.default_rng(11)
+    shorts = [rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+              for _ in range(2)]
+    long_p = rng.integers(0, cfg.vocab_size, 33).astype(np.int32)
+
+    def seed_engine(**kw):
+        eng = ServeEngine(lm, params, max_batch=4, max_seq=64,
+                          cache_backend="paged", page_size=8, **kw)
+        for i, p in enumerate(shorts):
+            eng.submit(Request(i, p.copy(), max_new_tokens=20))
+        eng.step()
+        eng.step()
+        eng.submit(Request(9, long_p.copy(), max_new_tokens=4))
+        return eng
+
+    eng = seed_engine(prefill_chunk=8)
+    long_active = False
+    for _ in range(40):
+        before = {i: len(eng.slot_req[i].out_tokens)
+                  for i in range(eng.B)
+                  if eng.slot_req[i] is not None and eng.active[i]}
+        eng.step()
+        for i, n in before.items():
+            assert len(eng.slot_req[i].out_tokens) == n + 1, (
+                f"stream in slot {i} skipped an iteration while the long "
+                "prompt prefilled")
+        if any(r is not None and r.id == 9 and eng.active[i]
+               for i, r in enumerate(eng.slot_req)):
+            long_active = True
+            break
+    assert long_active, "long prompt never finished its chunks"
+    # 1 chunk per short prompt + ceil(33/8) = 5 for the long one
+    assert eng.reg.counter("serve_prefill_chunks_total").get() == 7
+    assert eng.reg.counter("serve_decode_stall_iters").get() == 0
+    eng.run_until_drained()
+    assert len(eng.finished) == 3
+
+    whole = seed_engine()
+    whole.run_until_drained()
+    assert whole.reg.counter("serve_decode_stall_iters").get() >= 1
+    assert _streams(whole) == _streams(eng)
+
+
+# --------------------------------------- page-aware incremental alloc ----
+
+def test_tight_pool_admits_long_prompt_that_whole_prefill_defers():
+    """The incremental-allocation payoff: shorts hold most of a tight pool;
+    a long prompt's full footprint exceeds the free pages, so whole-prompt
+    admission defers it — but its *first chunk* fits and the banker check
+    proves the shorts' completions will free the rest, so the chunked
+    engine admits it immediately and lands it with chunk-time
+    stall/resume.  Streams must still match an unconstrained contiguous
+    engine bitwise."""
+    cfg, lm, params = small_lm()
+    rng = np.random.default_rng(3)
+    shorts = [rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+              for _ in range(2)]
+    long_p = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+
+    def drive(eng):
+        for i, p in enumerate(shorts):
+            eng.submit(Request(i, p.copy(), max_new_tokens=6))
+        eng.step()
+        eng.step()
+        eng.submit(Request(9, long_p.copy(), max_new_tokens=4))
+        for _ in range(300):
+            if not eng.step() and not eng.queue:
+                break
+        return eng
+
+    # 7 usable pages of 4: shorts hold 3 pages each (footprint 10), the
+    # long needs 7 (footprint 28) — free is 1 when it arrives
+    chunked = drive(ServeEngine(lm, params, max_batch=4, max_seq=32,
+                                cache_backend="paged", page_size=4,
+                                num_pages=8, prefill_chunk=4))
+    assert len(chunked.finished) == 3
+    assert chunked.reg.counter("serve_admission_deferred_total").get() == 0
+    assert chunked.reg.counter("serve_prefill_chunk_stalls_total").get() > 0
+
+    whole = drive(ServeEngine(lm, params, max_batch=4, max_seq=32,
+                              cache_backend="paged", page_size=4,
+                              num_pages=8))
+    assert len(whole.finished) == 3
+    assert whole.reg.counter("serve_admission_deferred_total").get() > 0
+
+    contig = drive(ServeEngine(lm, params, max_batch=4, max_seq=32,
+                               cache_backend="contiguous"))
+    assert _streams(chunked) == _streams(whole) == _streams(contig)
+
+
+# --------------------------------------------- allocator unit coverage ----
+
+def test_alloc_chunked_banker_denies_mutual_starvation():
+    """Two long chunked prefills that would each starve the other: the
+    second admission must be deferred — this is exactly the deadlock the
+    banker check exists to prevent."""
+    cfg, lm = cache_only_lm()
+    kv = lm.init_cache(4, 32, dtype=jnp.float32, backend="paged",
+                       page_size=4, num_pages=8)        # 7 usable
+    assert kv.alloc_chunked(0, 28, first=4) == 0        # 1 page now, 6 later
+    refs = kv._ref.copy()
+    assert kv.alloc_chunked(1, 28, first=4) is None     # 6+6 > 7: unsafe
+    np.testing.assert_array_equal(kv._ref, refs)        # clean rollback
+    assert kv._slot_pages[1] == [] and kv._slot_need[1] == 0
+    # a short whole-prompt request still fits alongside the long prefill
+    assert kv.alloc(1, 8) == 0
+
+
+def test_extend_stall_resume_and_need_accounting():
+    cfg, lm = cache_only_lm()
+    kv = lm.init_cache(4, 32, dtype=jnp.float32, backend="paged",
+                       page_size=4, num_pages=8)        # 7 usable
+    assert kv.alloc_chunked(0, 28, first=4) == 0
+    assert kv._slot_need[0] == 6
+    assert kv.alloc(1, 12) == 0                         # 3 pages, safe
+    assert kv.extend(0, 16)                             # +3 pages, safe
+    assert kv._slot_need[0] == 3 and len(kv._slot_pages[0]) == 4
+    assert not kv.extend(0, 20)                         # pool dry: stall
+    assert kv._slot_need[0] == 3                        # untouched by stall
+    kv.free(1)
+    assert kv.extend(0, 28)                             # resume to full
+    assert kv._slot_need[0] == 0 and len(kv._slot_pages[0]) == 7
+    kv.free(0)
+    assert kv.memory_stats().pages_in_use == 0
+
+
+def test_decode_shield_masks_table_row():
+    cfg, lm = cache_only_lm()
+    kv = lm.init_cache(2, 32, dtype=jnp.float32, backend="paged",
+                       page_size=4, num_pages=16)
+    assert kv.alloc(0, 8) == 0
+    assert kv.alloc_chunked(1, 16, first=8) == 0
+    assert kv.table_row(1).max() > 0
+    kv.set_decode_shield(1, True)
+    tbl = np.asarray(kv.decode_view()["page_table"])
+    assert (tbl[1] == 0).all(), "shielded row must read as scratch"
+    assert tbl[0].max() > 0, "other slots unaffected"
+    assert kv.table_row(1).max() > 0, "real row intact for chunk dispatch"
+    kv.set_decode_shield(1, False)
+    assert np.asarray(kv.decode_view()["page_table"])[1].max() > 0
+    kv.set_decode_shield(1, True)
+    kv.free(1)          # free drops the shield with the pages
+    assert 1 not in kv._shielded
+
+
+def test_chunked_prefix_sharing_registers_only_landed_pages():
+    """A chunked request's prompt pages become shareable page-by-page as
+    their chunks land — never at alloc time, when their content is still
+    pending."""
+    cfg, lm = cache_only_lm()
+    kv = lm.init_cache(4, 32, dtype=jnp.float32, backend="paged",
+                       page_size=4, num_pages=16)
+    prompt = np.arange(12, dtype=np.int32)
+    assert kv.alloc_chunked(0, 16, first=4, prefix=prompt) == 0
+    # nothing landed yet: an identical prompt shares nothing
+    assert kv.alloc_chunked(1, 16, first=4, prefix=prompt) == 0
+    kv.free(1)
+    kv.register_landed(0, prompt, 4)        # page 0 landed
+    assert kv.alloc_chunked(2, 16, first=4, prefix=prompt) == 4
+    kv.free(2)
+    assert kv.extend(0, 8)
+    kv.register_landed(0, prompt, 8)        # pages 0-1 landed
+    assert kv.alloc_chunked(3, 16, first=4, prefix=prompt) == 8
+
+
+def test_chunked_engine_constructor_validation():
+    cfg, lm, params = small_lm()
+    with pytest.raises(ValueError, match="page-aware"):
+        ServeEngine(lm, params, max_batch=2, max_seq=32,
+                    cache_backend="contiguous", prefill_chunk=8)
+    with pytest.raises(ValueError, match="budget"):
+        ServeEngine(lm, params, max_batch=2, max_seq=32,
+                    cache_backend="paged", prefill_chunk=8,
+                    prefill_budget=4)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServeEngine(lm, params, max_batch=2, max_seq=32,
+                    cache_backend="paged", prefill_budget=16)
+    # MoE: expert-capacity token dropping is computed per forwarded
+    # sequence, so per-chunk routing would diverge from whole-prompt —
+    # chunking must be rejected (params never touched before validation)
+    moe_cfg = dataclasses.replace(CONFIGS["moonshot-v1-16b-a3b"].reduced(),
+                                  dtype="float32", num_layers=2)
+    with pytest.raises(ValueError, match="capacity"):
+        ServeEngine(LM(moe_cfg), None, max_batch=2, max_seq=32,
+                    cache_backend="paged", prefill_chunk=8)
+
+
+def test_stalled_prefill_gets_freed_pages_before_new_admissions():
+    """Fairness under sustained traffic: a mid-prefill long prompt whose
+    chunk stalled must claim pages freed by completions *before* the next
+    iteration's admissions hand them to newer, shorter requests — chunks
+    retry ahead of `_admit`, so churning shorts can slow the long prompt
+    but never starve it."""
+    cfg, lm, params = small_lm()
+    rng = np.random.default_rng(7)
+    # 7 usable pages of 4.  Shorts: footprint 8 -> 2 pages.  Long: 24+4
+    # -> 7 pages, chunked 4 at a time.
+    eng = ServeEngine(lm, params, max_batch=4, max_seq=32,
+                      cache_backend="paged", page_size=4, num_pages=8,
+                      prefill_chunk=4)
+    next_id = 0
+    for _ in range(2):
+        eng.submit(Request(next_id, rng.integers(
+            0, cfg.vocab_size, 4).astype(np.int32), max_new_tokens=4))
+        next_id += 1
+    eng.step()
+    long_id = 999
+    eng.submit(Request(long_id, rng.integers(
+        0, cfg.vocab_size, 24).astype(np.int32), max_new_tokens=4))
+    # keep one short queued at all times for 60 iterations
+    for _ in range(60):
+        if len(eng.queue) < 2:
+            eng.submit(Request(next_id, rng.integers(
+                0, cfg.vocab_size, 4).astype(np.int32), max_new_tokens=4))
+            next_id += 1
+        eng.step()
+        if any(r.id == long_id for r in eng.finished):
+            break
+    assert any(r.id == long_id for r in eng.finished), (
+        "long prompt starved by short-request traffic")
+    assert eng.reg.counter("serve_prefill_chunk_stalls_total").get() > 0

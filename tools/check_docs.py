@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""Documentation link gate (``make docs-check``).
+
+Walks every tracked markdown file and verifies that each relative link
+target — ``[text](path)`` and bare reference-style ``[text]: path`` —
+resolves to a file or directory in the repo (anchors are stripped; http(s)
+and mailto links are skipped: CI must not depend on the network).  Exits
+nonzero listing every dangling link, so a doc can't merge pointing at a
+file a refactor moved.
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+REF = re.compile(r"^\[[^\]]+\]:\s+(\S+)", re.M)
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def tracked_markdown():
+    out = subprocess.run(["git", "ls-files", "*.md", "**/*.md"],
+                         cwd=ROOT, capture_output=True, text=True,
+                         check=True).stdout
+    return sorted({ROOT / line for line in out.splitlines() if line})
+
+
+def check_file(md: Path):
+    text = md.read_text()
+    bad = []
+    for target in LINK.findall(text) + REF.findall(text):
+        if target.startswith(SKIP_SCHEMES):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        # leading-slash links are repo-root-relative; lstrip so pathlib
+        # doesn't discard ROOT on an absolute join
+        resolved = (ROOT / path.lstrip("/") if path.startswith("/")
+                    else md.parent / path)
+        if not resolved.exists():
+            bad.append((target, str(resolved)))
+    return bad
+
+
+def main() -> int:
+    files = tracked_markdown()
+    failures = 0
+    for md in files:
+        for target, resolved in check_file(md):
+            print(f"{md.relative_to(ROOT)}: dangling link "
+                  f"'{target}' (-> {resolved})")
+            failures += 1
+    print(f"docs-check: {len(files)} markdown files, "
+          f"{failures} dangling links")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
