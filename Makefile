@@ -7,7 +7,8 @@
 PY ?= python
 
 .PHONY: test test-multidevice test-all smoke bench bench-serve \
-	bench-decode bench-sharded bench-chunked docs-check dev-deps
+	bench-decode bench-sharded bench-chunked bench-quant docs-check \
+	dev-deps
 
 # tier-1: the fast single-process suite.  The multi-device subprocess
 # files are split into `test-multidevice` (their own CI job) so this —
@@ -62,6 +63,16 @@ bench-sharded:
 bench-chunked:
 	PYTHONPATH=src:. $(PY) -c "from benchmarks import bench_serving; \
 	[print(f'{n},{u:.1f},{d}') for n, u, d in bench_serving.run_chunked()]"
+
+# int8 KV page benchmark: concurrent streams admitted at a fixed HBM
+# budget (int8 vs fp32, and bf16-vs-int8 at head_dim=64 — both asserted
+# >= 1.8x), bitwise greedy stream parity on both decode impls, and the
+# max-logit-error quality gate vs the fp32 oracle; JSON lands in
+# benchmarks/out/quant_kv.json and one trajectory entry is appended to
+# the committed BENCH_serving.json
+bench-quant:
+	PYTHONPATH=src:. $(PY) -c "from benchmarks import bench_serving; \
+	[print(f'{n},{u:.1f},{d}') for n, u, d in bench_serving.run_quant()]"
 
 # documentation gate: every relative link in tracked *.md files must
 # resolve, and docs/telemetry.md must list exactly the metrics the engine

@@ -33,6 +33,24 @@ from repro.serve.engine import sample_token
 OUT_JSON = Path(__file__).resolve().parent / "out" / "decode_transient.json"
 SHARDED_JSON = Path(__file__).resolve().parent / "out" / "sharded_serving.json"
 CHUNKED_JSON = Path(__file__).resolve().parent / "out" / "chunked_prefill.json"
+QUANT_JSON = Path(__file__).resolve().parent / "out" / "quant_kv.json"
+# committed perf trajectory: one entry appended per `make bench-quant` run,
+# so regressions in the headline serving numbers show up in review diffs
+TRAJECTORY_JSON = Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+
+# documented int8 KV quality bound (see docs/serving.md "Quantized KV
+# pages"): max |quantized - fp32-oracle| over every decoded logit of the
+# bench workload.  Per-element dequant error is <= absmax/254 per row
+# (tests/test_quant.py); this is the calibrated end-to-end bound the bench
+# asserts after that error propagates through attention + MLP + unembed.
+QUANT_LOGIT_TOL = 0.05
+
+
+def _append_trajectory(entry: dict) -> None:
+    hist = (json.loads(TRAJECTORY_JSON.read_text())
+            if TRAJECTORY_JSON.exists() else [])
+    hist.append(entry)
+    TRAJECTORY_JSON.write_text(json.dumps(hist, indent=1) + "\n")
 
 
 class GroupedReferenceEngine:
@@ -547,6 +565,212 @@ def run_chunked():
         ("serving/chunked_ttft_long", chunked["ttft_long_ms"] * 1e3,
          f"long-prompt TTFT {chunked['ttft_long_ms']:.0f}ms chunked vs "
          f"{whole['ttft_long_ms']:.0f}ms whole"),
+    ]
+
+
+def _quant_admission(lm, cfg, baseline_dtype, dense_slots: int = 8):
+    """Concurrent short streams admitted at one fixed HBM budget:
+    ``baseline_dtype`` pages vs int8 pages with per-row fp32 scales.
+
+    Same host-side ``alloc`` bookkeeping as ``_admission_at_budget`` (zero
+    device dispatches); prefix sharing is off so the ratio measures the
+    page *format* alone, not sharing.  Returns
+    (n_baseline, n_int8, pool stats for each)."""
+    max_seq, page = 64, 8
+    budget = contiguous_kv_bytes(cfg, dense_slots, max_seq, baseline_dtype)
+    n_req, plen, new_tokens = 64, 12, 4
+    prompt = (np.arange(plen) % cfg.vocab_size).astype(np.int32)
+    footprint = min(plen + new_tokens, max_seq)
+
+    def admitted(kv_dtype, dtype):
+        n_pages = budget // page_kv_bytes(cfg, page, dtype,
+                                          kv_dtype=kv_dtype)
+        kv = make_cache(lm, n_req, max_seq, dtype=dtype, backend="paged",
+                        page_size=page, num_pages=n_pages,
+                        prefix_sharing=False, kv_dtype=kv_dtype)
+        n = 0
+        while n < n_req and kv.alloc(n, footprint, prefix=prompt) is not None:
+            n += 1
+        st = kv.memory_stats()
+        assert st.bytes_total <= budget, (st.bytes_total, budget)
+        return n, st
+
+    n_base, base_stats = admitted("native", baseline_dtype)
+    n_int8, int8_stats = admitted("int8", baseline_dtype)
+    return n_base, n_int8, base_stats, int8_stats
+
+
+def _quant_logit_trace(lm, cfg, params, impl: str, kv_dtype: str,
+                       prompts: np.ndarray, steps: int, page: int,
+                       max_seq: int):
+    """Greedy decode with the decoded logits visible: whole-prompt prefill
+    through the cache's real staged write (quantize-on-write for int8),
+    then ``steps`` fused decode steps (dequant-on-read), collecting the
+    full-vocab logits of every decoded position.  Returns (tokens (B, steps)
+    int64, logits (B, steps, V) fp32) — the fp32 ``kv_dtype="native"`` run
+    of the same workload is the oracle the int8 runs are scored against."""
+    b, plen = prompts.shape
+    vocab = cfg.vocab_size
+    kv = make_cache(lm, b, max_seq, dtype=jnp.float32, backend="paged",
+                    page_size=page, decode_impl=impl, kv_dtype=kv_dtype)
+    for s in range(b):
+        assert kv.alloc(s, plen + steps) is not None
+    logits, _, pcache = lm.forward(params, {"tokens": jnp.asarray(prompts)},
+                                   collect_cache=True)
+    dest = np.stack([kv.prefill_dest(s, plen, plen) for s in range(b)])
+    kv.update({**kv.state, "layers": kv.staged_write_prefill(
+        kv.state["layers"], pcache["layers"], jnp.asarray(dest, jnp.int32))})
+    step = jax.jit(functools.partial(lm.decode_step, decode_impl=impl))
+    tok = np.asarray(jnp.argmax(logits[:, plen - 1, :vocab], axis=-1))
+    pos = np.full(b, plen, np.int32)
+    out_toks, out_logits = [], []
+    for _ in range(steps):
+        lg, new_cache = step(params, jnp.asarray(tok[:, None], jnp.int32),
+                             kv.decode_view(), jnp.asarray(pos))
+        kv.update(new_cache)
+        rows = np.asarray(lg[:, -1, :vocab], np.float32)
+        out_toks.append(tok)
+        out_logits.append(rows)
+        tok = rows.argmax(axis=-1)
+        pos += 1
+    for s in range(b):
+        kv.free(s)
+    return np.stack(out_toks, 1), np.stack(out_logits, 1)
+
+
+def run_quant():
+    """Int8 KV page benchmark (``make bench-quant``): concurrent streams at
+    a fixed HBM budget, end-to-end quality gate, and the decode transient.
+
+    * **Admission** — the same short-prompt workload admitted into an fp32
+      page pool vs an int8 pool holding the *same pinned bytes* (and the
+      bf16-vs-int8 contrast at head_dim=64, the deployment-shaped geometry
+      — at head_dim 32 the per-row fp32 scale overhead caps bf16→int8 at
+      1.78x).  Asserts >= 1.8x concurrent streams in both contrasts.
+    * **Quality** — the ragged serving workload on int8 engines (gather and
+      pallas decode) must emit bitwise-identical greedy streams to the fp32
+      engine, and a logit-visible greedy trace scores every decoded logit
+      against the fp32 oracle: max |error| must stay under the documented
+      ``QUANT_LOGIT_TOL`` bound.  The full error distribution lands in the
+      JSON.
+    * **Trajectory** — appends one entry (tok/s, streams-at-budget, decode
+      transient bytes, admission ratios, logit error) to the committed
+      ``BENCH_serving.json`` so the headline numbers are diffable in review.
+    """
+    cfg = dataclasses.replace(CONFIGS["llama3.2-3b"].reduced(),
+                              dtype="float32", num_layers=2)
+    lm = LM(cfg)
+    params = lm.init(jax.random.key(0))
+    max_batch, max_seq, page = 8, 64, 8
+    n_requests, new_tokens = 12, 8
+
+    # --- admission at fixed budget: fp32 vs int8 at the bench geometry,
+    # bf16 vs int8 at head_dim=64 (pure host-side bookkeeping) ---
+    n_f32, n_i8, f32_st, i8_st = _quant_admission(lm, cfg, jnp.float32)
+    cfg64 = dataclasses.replace(cfg, head_dim=64)
+    n_b16, n_i8_64, b16_st, i8_64_st = _quant_admission(
+        LM(cfg64), cfg64, jnp.bfloat16)
+    ratio_f32 = n_i8 / max(n_f32, 1)
+    ratio_b16 = n_i8_64 / max(n_b16, 1)
+    assert ratio_f32 >= 1.8, (n_f32, n_i8)
+    assert ratio_b16 >= 1.8, (n_b16, n_i8_64)
+
+    # --- end-to-end stream parity + tok/s: fp32 engine vs int8 engines ---
+    engines = {}
+    for name, kw in (("native", {}),
+                     ("int8_gather", dict(kv_dtype="int8")),
+                     ("int8_pallas", dict(kv_dtype="int8",
+                                          decode_impl="pallas"))):
+        eng = ServeEngine(lm, params, max_batch, max_seq,
+                          cache_backend="paged", page_size=page, **kw)
+        wall, toks, _ = _drain_measured(eng, cfg, n_requests, new_tokens)
+        streams = sorted((r.id, tuple(r.out_tokens)) for r in eng.finished)
+        engines[name] = dict(tok_s=toks / wall, streams=streams,
+                             stats=eng.kv.memory_stats())
+    for name in ("int8_gather", "int8_pallas"):
+        assert engines[name]["streams"] == engines["native"]["streams"], \
+            f"int8 stream divergence ({name})"
+
+    # --- logit-visible greedy trace vs the fp32 oracle ---
+    rng = np.random.default_rng(7)
+    prompts = rng.integers(0, cfg.vocab_size, (4, 9)).astype(np.int32)
+    steps = 8
+    oracle_toks, oracle_logits = _quant_logit_trace(
+        lm, cfg, params, "gather", "native", prompts, steps, page, max_seq)
+    errs = {}
+    for impl in ("gather", "pallas"):
+        toks, logits = _quant_logit_trace(
+            lm, cfg, params, impl, "int8", prompts, steps, page, max_seq)
+        assert np.array_equal(toks, oracle_toks), f"greedy divergence {impl}"
+        e = np.abs(logits - oracle_logits)
+        errs[impl] = {
+            "max": float(e.max()),
+            "p50": float(np.median(e)),
+            "p99": float(np.quantile(e, 0.99)),
+            "mean": float(e.mean()),
+        }
+        assert e.max() <= QUANT_LOGIT_TOL, (impl, float(e.max()))
+
+    # --- decode transient bytes under the int8 format ---
+    transient = {
+        impl: decode_transient_bytes(cfg, max_batch, max_seq // page, page,
+                                     jnp.float32, impl, kv_dtype="int8")
+        for impl in ("gather", "pallas")}
+
+    records = {
+        "admission": {
+            "budget_dtype_fp32": {
+                "baseline": n_f32, "int8": n_i8,
+                "ratio": round(ratio_f32, 3),
+                "baseline_pages": f32_st.pages_total,
+                "int8_pages": i8_st.pages_total,
+                "int8_scale_bytes": i8_st.bytes_scales,
+            },
+            "budget_dtype_bf16_hd64": {
+                "baseline": n_b16, "int8": n_i8_64,
+                "ratio": round(ratio_b16, 3),
+                "baseline_pages": b16_st.pages_total,
+                "int8_pages": i8_64_st.pages_total,
+                "int8_scale_bytes": i8_64_st.bytes_scales,
+            },
+        },
+        "tok_s": {k: round(v["tok_s"], 1) for k, v in engines.items()},
+        "logit_err": errs, "logit_tol": QUANT_LOGIT_TOL,
+        "decode_transient_bytes_int8": transient,
+        "stream_parity": True, "greedy_trace_parity": True,
+    }
+    QUANT_JSON.parent.mkdir(parents=True, exist_ok=True)
+    QUANT_JSON.write_text(json.dumps(records, indent=1))
+    _append_trajectory({
+        "date": time.strftime("%Y-%m-%d"),
+        "bench": "quant",
+        "tok_s_int8_gather": round(engines["int8_gather"]["tok_s"], 1),
+        "tok_s_int8_pallas": round(engines["int8_pallas"]["tok_s"], 1),
+        "tok_s_fp32": round(engines["native"]["tok_s"], 1),
+        "concurrent_at_budget_fp32": n_f32,
+        "concurrent_at_budget_int8": n_i8,
+        "quant_admission_ratio_fp32": round(ratio_f32, 3),
+        "quant_admission_ratio_bf16_hd64": round(ratio_b16, 3),
+        "decode_transient_bytes_int8_pallas": transient["pallas"],
+        "max_logit_err": max(e["max"] for e in errs.values()),
+        "stream_parity": True,
+    })
+    return [
+        ("serving/quant_admission_fp32", 0.0,
+         f"{n_i8} int8 vs {n_f32} fp32 streams at the same budget "
+         f"(x{ratio_f32:.2f}; {i8_st.pages_total} vs {f32_st.pages_total} "
+         f"pages)"),
+        ("serving/quant_admission_bf16_hd64", 0.0,
+         f"{n_i8_64} int8 vs {n_b16} bf16 streams (x{ratio_b16:.2f} at "
+         f"head_dim=64)"),
+        ("serving/quant_tok_s", engines["int8_gather"]["tok_s"],
+         f"int8 gather={engines['int8_gather']['tok_s']:.1f} "
+         f"pallas={engines['int8_pallas']['tok_s']:.1f} vs "
+         f"fp32={engines['native']['tok_s']:.1f} tok/s, streams bitwise ok"),
+        ("serving/quant_logit_err", max(e["max"] for e in errs.values()),
+         f"max |logit err| gather={errs['gather']['max']:.2e} "
+         f"pallas={errs['pallas']['max']:.2e} (tol {QUANT_LOGIT_TOL}), "
+         f"greedy trace identical"),
     ]
 
 

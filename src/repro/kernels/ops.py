@@ -37,24 +37,28 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
 
 
 @jax.jit
-def paged_decode_attention(q, k_pool, v_pool, page_table, positions):
+def paged_decode_attention(q, k_pool, v_pool, page_table, positions,
+                           k_scale=None, v_scale=None):
     """Model-layout wrapper for the page-table-walking flash-decode kernel.
 
     q: (B, 1, KV, G, D) — one query token per slot; k/v pools:
     (P, page, KV, D); page_table: (B, M) int32; positions: (B,) int32.
     Returns (B, 1, KV, G, D).  No gathered dense KV view is materialized:
     each (slot, kv-head) program streams one physical page at a time
-    (``repro.kernels.paged_decode``)."""
+    (``repro.kernels.paged_decode``).  ``k_scale``/``v_scale``
+    ((P, page, KV) fp32, int8 pools): dequantized in-register inside the
+    kernel, scales SMEM-prefetched next to the page table."""
     from repro.kernels import paged_decode as _pd
     b, s, kv, g, d = q.shape
     assert s == 1, q.shape
     o = _pd.paged_flash_decode(q[:, 0], k_pool, v_pool, page_table,
-                               positions, interpret=_interpret())
+                               positions, k_scale=k_scale, v_scale=v_scale,
+                               interpret=_interpret())
     return o[:, None]
 
 
 def paged_decode_partials(q, k_pool, v_pool, page_table, positions,
-                          page_offset):
+                          page_offset, k_scale=None, v_scale=None):
     """Per-chip partial paged decode for sharded serving
     (``repro.parallel.pagedkv``): the pool argument is one chip's
     (P/n, page, KV, D) shard, ``page_offset`` its first global page id, and
@@ -62,13 +66,15 @@ def paged_decode_partials(q, k_pool, v_pool, page_table, positions,
     like dead pages.  q: (B, 1, KV, G, D).  Returns the raw fp32
     online-softmax triple ``(acc (B,1,KV,G,D), l (B,KV,G), m (B,KV,G))``
     whose cross-chip psum-style merge reconstructs the full softmax.
-    Not jitted here: it only runs inside a shard_map body that is already
-    staged by the engine's fused dispatch."""
+    ``k_scale``/``v_scale``: the chip's local (P/n, page, KV) scale shards
+    (int8 pools).  Not jitted here: it only runs inside a shard_map body
+    that is already staged by the engine's fused dispatch."""
     from repro.kernels import paged_decode as _pd
     b, s, kv, g, d = q.shape
     assert s == 1, q.shape
     acc, l, m = _pd.paged_flash_decode(q[:, 0], k_pool, v_pool, page_table,
                                        positions, page_offset=page_offset,
+                                       k_scale=k_scale, v_scale=v_scale,
                                        partials=True, interpret=_interpret())
     return acc[:, None], l, m
 

@@ -71,14 +71,20 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(pt_ref, pos_ref, off_ref, q_ref, k_ref, v_ref, *refs,
+def _kernel(pt_ref, pos_ref, off_ref, *refs,
             scale: float, page: int, n_pages: int, p_local: int,
-            partials: bool):
+            partials: bool, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, *refs = refs
+    else:
+        ks_ref = vs_ref = None
+    q_ref, k_ref, v_ref, *refs = refs
     if partials:
         o_ref, l_ref, mx_ref, m_scr, l_scr, acc_scr = refs
     else:
         o_ref, m_scr, l_scr, acc_scr = refs
     b = pl.program_id(0)
+    h = pl.program_id(1)
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -98,6 +104,11 @@ def _kernel(pt_ref, pos_ref, off_ref, q_ref, k_ref, v_ref, *refs,
     def _body():
         q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)              # (page, D)
+        if quantized:
+            # in-register dequant: the (page,) fp32 scale rows for this
+            # (page, head) ride in SMEM next to the page table and resolve
+            # through the same ``local`` id the DMA used
+            k = k * ks_ref[local, :, h][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         rows = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -108,6 +119,8 @@ def _kernel(pt_ref, pos_ref, off_ref, q_ref, k_ref, v_ref, *refs,
         corr = jnp.exp(m_prev - m_new)
         l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            v = v * vs_ref[local, :, h][:, None]
         acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -127,8 +140,8 @@ def _kernel(pt_ref, pos_ref, off_ref, q_ref, k_ref, v_ref, *refs,
 
 
 def paged_flash_decode(q, k_pool, v_pool, page_table, positions,
-                       page_offset=None, partials: bool = False,
-                       interpret: bool = False):
+                       page_offset=None, k_scale=None, v_scale=None,
+                       partials: bool = False, interpret: bool = False):
     """q: (B, KV, G, D); k/v pools: (P, page, KV, D); page_table: (B, M)
     int32; positions: (B,) int32.  Returns (B, KV, G, D).
 
@@ -137,7 +150,14 @@ def paged_flash_decode(q, k_pool, v_pool, page_table, positions,
     are treated exactly like dead pages (index-map redirect + compute skip).
     ``partials=True`` returns the raw fp32 online-softmax triple
     ``(acc (B,KV,G,D), l (B,KV,G), m (B,KV,G))`` instead of the normalized
-    output, for the cross-chip partial-softmax merge of sharded serving."""
+    output, for the cross-chip partial-softmax merge of sharded serving.
+
+    ``k_scale``/``v_scale`` (int8 pools): (P, page, KV) fp32 absmax scales
+    for the quantized page format.  They ride as scalar-prefetch operands —
+    SMEM-resident next to the page table — and the body dequantizes each
+    K/V tile in-register (``int8 -> fp32 * scale_row``) right after the
+    block load, so the dense-precision transient never exists: HBM traffic
+    stays at the int8 tile plus (page,) scale rows per grid step."""
     b, kv, g, d = q.shape
     p_local, page = k_pool.shape[:2]
     assert k_pool.shape == v_pool.shape and k_pool.shape[2:] == (kv, d), (
@@ -145,18 +165,25 @@ def paged_flash_decode(q, k_pool, v_pool, page_table, positions,
     m = page_table.shape[1]
     assert page_table.shape == (b, m) and positions.shape == (b,), (
         page_table.shape, positions.shape, b)
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), "k/v scales travel together"
+    if quantized:
+        assert k_scale.shape == v_scale.shape == (p_local, page, kv), (
+            k_scale.shape, k_pool.shape)
     scale = 1.0 / math.sqrt(d)
     if page_offset is None:
         page_offset = 0
     off = jnp.asarray(page_offset, jnp.int32).reshape(1)
 
-    def q_map(b_, h, j, pt, pos, off):
+    # index maps see every scalar-prefetch operand; scales (when present)
+    # trail the table/positions/offset and are unused for indexing
+    def q_map(b_, h, j, pt, pos, off, *_):
         return (b_, h, 0, 0)
 
-    def lm_map(b_, h, j, pt, pos, off):
+    def lm_map(b_, h, j, pt, pos, off, *_):
         return (b_, h, 0)
 
-    def kv_map(b_, h, j, pt, pos, off):
+    def kv_map(b_, h, j, pt, pos, off, *_):
         # the page-table walk: dead pages (past the slot's position) and
         # non-local pages (outside this chip's pool shard) resolve to local
         # page 0 so repeated skipped steps elide their DMA
@@ -165,7 +192,8 @@ def paged_flash_decode(q, k_pool, v_pool, page_table, positions,
         return (jnp.where(ok, local, 0), 0, h, 0)
 
     kernel = functools.partial(_kernel, scale=scale, page=page, n_pages=m,
-                               p_local=p_local, partials=partials)
+                               p_local=p_local, partials=partials,
+                               quantized=quantized)
     out_specs = [pl.BlockSpec((1, 1, g, d), q_map)]
     out_shape = [jax.ShapeDtypeStruct(
         (b, kv, g, d), jnp.float32 if partials else q.dtype)]
@@ -174,8 +202,13 @@ def paged_flash_decode(q, k_pool, v_pool, page_table, positions,
                       pl.BlockSpec((1, 1, g), lm_map)]
         out_shape += [jax.ShapeDtypeStruct((b, kv, g), jnp.float32),
                       jax.ShapeDtypeStruct((b, kv, g), jnp.float32)]
+    scalar_args = [page_table.astype(jnp.int32),
+                   positions.astype(jnp.int32), off]
+    if quantized:
+        scalar_args += [k_scale.astype(jnp.float32),
+                        v_scale.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=len(scalar_args),
         grid=(b, kv, m),
         in_specs=[
             pl.BlockSpec((1, 1, g, d), q_map),
@@ -193,5 +226,4 @@ def paged_flash_decode(q, k_pool, v_pool, page_table, positions,
         kernel, grid_spec=grid_spec,
         out_shape=out_shape if partials else out_shape[0],
         interpret=interpret,
-    )(page_table.astype(jnp.int32), positions.astype(jnp.int32), off,
-      q, k_pool, v_pool)
+    )(*scalar_args, q, k_pool, v_pool)

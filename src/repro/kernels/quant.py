@@ -1,0 +1,73 @@
+"""Shared int8 symmetric-absmax quantization — one implementation for both
+the compressed-gradient-sync path (`repro.parallel.compression`) and the
+quantized KV page format (`repro.serve.kvcache`).
+
+Two granularities live here:
+
+* `quantize_int8` / `dequantize` — per-*tensor* scale with optional error
+  feedback, exactly the gradient-compression contract: the residual of one
+  step seeds the next so quantization noise cancels over time.
+* `quantize_kv` / `dequantize_kv` — per-*row* scale over the last axis
+  (head_dim), the KV-page contract: every (position, kv_head) row gets its
+  own fp32 scale so a single decode token can be quantized on write without
+  rescaling — and thus re-rounding — the rest of its page.
+
+Error bound (both forms): symmetric absmax rounds to the nearest of 255
+levels spanning [-absmax, absmax], so per element
+
+    |x - dequant(quant(x))| <= scale / 2 = absmax / 254
+
+over the scale's granule (the tensor, or the row).  Zero and denormal
+rows are exact: the scale floor (1e-12 / 127) maps them to q == 0 and
+dequantizes back to exactly 0.0 within fp32.  The bound is property-tested
+in tests/test_quant.py including denormal/zero pages.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Quantized levels span [-QMAX, QMAX]; absmax maps to +/-QMAX.
+QMAX = 127.0
+
+#: Floor on the pre-division absmax so all-zero (or denormal) granules get a
+#: tiny positive scale instead of dividing by zero; q rounds to 0 and the
+#: round trip is exact.
+ABSMAX_FLOOR = 1e-12
+
+
+def quantize_int8(x, seed_err=None):
+    """Symmetric per-tensor int8 quantization with error feedback input.
+
+    Returns (q int8, scale f32 scalar, err f32) where ``err`` is the
+    residual ``x + seed_err - dequant(q)`` to be carried to the next call.
+    """
+    xf = x.astype(jnp.float32)
+    if seed_err is not None:
+        xf = xf + seed_err
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), ABSMAX_FLOOR) / QMAX
+    q = jnp.clip(jnp.round(xf / scale), -QMAX, QMAX).astype(jnp.int8)
+    err = xf - q.astype(jnp.float32) * scale
+    return q, scale, err
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_kv(x):
+    """Per-row symmetric int8 quantization over the last axis.
+
+    ``x``: (..., D) float.  Returns ``(q, scale)`` with ``q`` int8 of the
+    same shape and ``scale`` f32 of shape ``x.shape[:-1]`` — one scale per
+    row, so rows (KV positions) quantize independently: decode can write a
+    single token's row into an int8 page without touching its neighbours.
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), ABSMAX_FLOOR) / QMAX
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -QMAX, QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q, scale, dtype=jnp.float32):
+    """Inverse of `quantize_kv`: (..., D) int8 + (...,) f32 -> (..., D)."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)

@@ -24,17 +24,27 @@ def flash_attention_ref(q, k, v, *, causal: bool = True):
     return jnp.einsum("bqk,bkd->bqd", p, vr.astype(jnp.float32)).astype(q.dtype)
 
 
-def paged_decode_ref(q, k_pool, v_pool, page_table, positions):
+def paged_decode_ref(q, k_pool, v_pool, page_table, positions,
+                     k_scale=None, v_scale=None):
     """Paged single-token decode attention by dense gather — the masked
     softmax the flash kernel must reproduce.  q: (B, KV, G, D); pools:
     (P, page, KV, D); page_table: (B, M); positions: (B,).  The gathered
     (B, M*page, KV, D) view is exactly the transient the kernel exists to
-    avoid; here it *is* the spec."""
+    avoid; here it *is* the spec.
+
+    ``k_scale``/``v_scale`` ((P, page, KV) fp32): the int8 page format's
+    per-row scales — the gathered views dequantize through the same table,
+    the spec the kernel's in-register dequant must match."""
     b, kv, g, d = q.shape
     page = k_pool.shape[1]
     m = page_table.shape[1]
     kg = jnp.take(k_pool, page_table, axis=0).reshape(b, m * page, kv, d)
     vg = jnp.take(v_pool, page_table, axis=0).reshape(b, m * page, kv, d)
+    if k_scale is not None:
+        ksg = jnp.take(k_scale, page_table, axis=0).reshape(b, m * page, kv)
+        vsg = jnp.take(v_scale, page_table, axis=0).reshape(b, m * page, kv)
+        kg = kg.astype(jnp.float32) * ksg[..., None]
+        vg = vg.astype(jnp.float32) * vsg[..., None]
     s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32),
                    kg.astype(jnp.float32)) / (d ** 0.5)
     valid = jnp.arange(m * page)[None, :] <= positions[:, None]

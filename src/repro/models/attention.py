@@ -267,8 +267,18 @@ def gather_pages(pool, page_table, positions=None):
     return k.reshape(b, m * page, *pool.shape[2:])
 
 
+def dequant_gathered(gathered, scale_pool, lt_or_table, b, rows, dtype):
+    """Dequantize a gathered int8 KV view: ``gathered`` (B, S, KV, D) int8,
+    ``scale_pool`` (P, page, KV) fp32, ``lt_or_table`` the (B, M) table the
+    int8 view was gathered through — the scales resolve through the *same*
+    indirection, so row and scale can never come from different pages."""
+    sg = jnp.take(scale_pool, lt_or_table, axis=0).reshape(
+        b, rows, scale_pool.shape[2])
+    return (gathered.astype(jnp.float32) * sg[..., None]).astype(dtype)
+
+
 def paged_gather_partials(q, k_pool, v_pool, page_table, positions,
-                          page_offset):
+                          page_offset, k_scale=None, v_scale=None):
     """Per-chip partial paged decode by XLA gather — the sharded-serving
     counterpart of the plain gather path, so gather/pallas parity holds on
     every backend (the Pallas twin is ``kernels.ops.paged_decode_partials``).
@@ -284,7 +294,11 @@ def paged_gather_partials(q, k_pool, v_pool, page_table, positions,
     l (B,KV,G), m (B,KV,G))``; ``merge_paged_partials`` combines chips.  A
     chip owning no live page of a slot returns the identity element
     (acc=0, l=0, m=NEG_INF) — note the explicit ``where`` on p below: with
-    every score at NEG_INF the naive ``exp(s - max)`` would be exp(0)=1."""
+    every score at NEG_INF the naive ``exp(s - max)`` would be exp(0)=1.
+
+    ``k_scale``/``v_scale`` (int8 pools): the local (P/n, page, KV) fp32
+    scale shards — gathered rows dequantize through the same redirected
+    table before the score/accumulate einsums."""
     hd = q.shape[-1]
     b, m = page_table.shape
     pn, page = k_pool.shape[:2]
@@ -294,6 +308,9 @@ def paged_gather_partials(q, k_pool, v_pool, page_table, positions,
     lt = jnp.where(ok, local, 0)
     kg = jnp.take(k_pool, lt, axis=0).reshape(b, m * page, *k_pool.shape[2:])
     vg = jnp.take(v_pool, lt, axis=0).reshape(b, m * page, *v_pool.shape[2:])
+    if k_scale is not None:
+        kg = dequant_gathered(kg, k_scale, lt, b, m * page, jnp.float32)
+        vg = dequant_gathered(vg, v_scale, lt, b, m * page, jnp.float32)
     s = jnp.einsum("bkgd,bskd->bkgs", q[:, 0], kg).astype(jnp.float32)
     s = s / math.sqrt(hd)
     rows = jnp.arange(m * page)[None, :]
@@ -324,7 +341,7 @@ def merge_paged_partials(acc, l, m, axis_name: str):
 
 
 def decode_attention(q, k_cache, v_cache, cache_index, page_table=None,
-                     impl: str = "gather"):
+                     impl: str = "gather", k_scale=None, v_scale=None):
     """q: (B,1,KV,G,D); attends to positions <= index.
 
     ``cache_index``: scalar or (B,) per-slot positions — each slot gets its
@@ -341,17 +358,35 @@ def decode_attention(q, k_cache, v_cache, cache_index, page_table=None,
     the page table block-by-block, O(page) transient, matching this masked
     softmax within fp32 online-softmax tolerance).  Contiguous caches
     ignore ``impl``.
+
+    ``k_scale``/``v_scale`` (paged int8 pools only): (P, page, KV) fp32
+    absmax scales — the gather path dequantizes the gathered int8 view,
+    the pallas path dequantizes in-register inside the kernel.
     """
     hd = q.shape[-1]
     pos = decode_positions(cache_index, q.shape[0])
+    assert k_scale is None or page_table is not None, (
+        "KV scales ride on the paged int8 page format")
     if page_table is not None:
         if impl == "pallas":
             from repro.kernels import ops as kops
             return kops.paged_decode_attention(q, k_cache, v_cache,
-                                               page_table, pos)
+                                               page_table, pos,
+                                               k_scale=k_scale,
+                                               v_scale=v_scale)
         assert impl == "gather", impl
+        b, m = page_table.shape
+        page = k_cache.shape[1]
         k_cache = gather_pages(k_cache, page_table, pos)
         v_cache = gather_pages(v_cache, page_table, pos)
+        if k_scale is not None:
+            # dequantize through the same live-masked table as the rows
+            live = jnp.arange(m)[None, :] <= pos[:, None] // page
+            lt = jnp.where(live, page_table, 0)
+            k_cache = dequant_gathered(k_cache, k_scale, lt, b,
+                                       m * page, q.dtype)
+            v_cache = dequant_gathered(v_cache, v_scale, lt, b,
+                                       m * page, q.dtype)
     s = jnp.einsum("bqkgd,bskd->bkgqs", q, k_cache).astype(jnp.float32)
     s = s / math.sqrt(hd)
     valid = jnp.arange(k_cache.shape[1])[None, :] <= pos[:, None]  # (B,Smax)
@@ -467,7 +502,8 @@ def _scatter_chunk_paged(pool, new, dest):
 
 
 def attention_prefill_chunk_block(p, cfg, x, k_pool, v_pool, start_pos, dest,
-                                  page_table, last_pos):
+                                  page_table, last_pos,
+                                  k_scale=None, v_scale=None):
     """Chunked-prefill attention with prior cache: a (B, C) token chunk at a
     per-request position offset writes its K/V into the paged pools and
     attends causally over everything written so far — the pages landed by
@@ -487,14 +523,33 @@ def attention_prefill_chunk_block(p, cfg, x, k_pool, v_pool, start_pos, dest,
     The math matches whole-prompt dense prefill op-for-op (same einsum
     contractions, fp32 masked softmax, NEG_INF mask exp-underflowing to
     exactly 0.0), which is what makes chunked and whole-prompt prefill
-    bitwise-identical token streams rather than merely close ones."""
+    bitwise-identical token streams rather than merely close ones.
+
+    ``k_scale``/``v_scale`` (int8 pools): the chunk's K/V quantize before
+    the scatter — scales land through the same ``dest`` indices — and the
+    gathered views dequantize before attention, so a chunk attends its own
+    rows exactly as a later decode step will read them (round-tripped
+    through int8).  Returns a 5-tuple including the new scale arrays."""
+    quantized = k_scale is not None
     b, c = x.shape[:2]
     qpos = start_pos[:, None] + jnp.arange(c)[None, :]            # (B, C)
     q, k, v = project_qkv(p, cfg, x, x, qpos, qpos)
+    if quantized:
+        from repro.kernels.quant import quantize_kv
+        k, sk = quantize_kv(k)
+        v, sv = quantize_kv(v)
+        k_scale = _scatter_chunk_paged(k_scale, sk, dest)
+        v_scale = _scatter_chunk_paged(v_scale, sv, dest)
     k_pool = _scatter_chunk_paged(k_pool, k, dest)
     v_pool = _scatter_chunk_paged(v_pool, v, dest)
     kg = gather_pages(k_pool, page_table, last_pos)               # (B,S,KV,D)
     vg = gather_pages(v_pool, page_table, last_pos)
+    if quantized:
+        m, page = page_table.shape[1], k_pool.shape[1]
+        live = jnp.arange(m)[None, :] <= last_pos[:, None] // page
+        lt = jnp.where(live, page_table, 0)
+        kg = dequant_gathered(kg, k_scale, lt, b, m * page, x.dtype)
+        vg = dequant_gathered(vg, v_scale, lt, b, m * page, x.dtype)
     hd = q.shape[-1]
     s = jnp.einsum("bqkgd,bskd->bkgqs", q, kg).astype(jnp.float32)
     s = s / math.sqrt(hd)
@@ -507,13 +562,16 @@ def attention_prefill_chunk_block(p, cfg, x, k_pool, v_pool, start_pos, dest,
     s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
     probs = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     y = jnp.einsum("bkgqs,bskd->bqkgd", probs, vg)
+    if quantized:
+        return output_proj(p, cfg, y), k_pool, v_pool, k_scale, v_scale
     return output_proj(p, cfg, y), k_pool, v_pool
 
 
 def attention_decode_block(p, cfg, x, k_cache, v_cache, cache_index,
                            rope: bool = True, page_table=None,
                            decode_impl: str = "gather", mesh=None,
-                           kv_axis: str = "model"):
+                           kv_axis: str = "model",
+                           k_scale=None, v_scale=None):
     """One-token decode.  x: (B,1,d).  ``cache_index`` is a scalar
     (synchronized batch) or a (B,) vector of per-slot positions (ragged
     continuous batching: per-slot RoPE, scatter-write, and causal mask).
@@ -525,23 +583,45 @@ def attention_decode_block(p, cfg, x, k_cache, v_cache, cache_index,
     flash kernel).  With ``mesh`` (paged only), the pools are sharded P/n
     along ``kv_axis`` and the scatter-write + table resolution run under
     shard_map with a cross-chip partial-softmax merge
-    (``repro.parallel.pagedkv``).  Returns (y, new_k_cache, new_v_cache)."""
+    (``repro.parallel.pagedkv``).  Returns (y, new_k_cache, new_v_cache).
+
+    ``k_scale``/``v_scale`` (paged int8 pools, ``kv_dtype="int8"``): the
+    (P, page, KV) fp32 scale arrays — the new token's K/V row quantizes on
+    write (row + scale land through the same table-resolved index) and the
+    read path dequantizes per ``decode_impl``.  Returns the 5-tuple
+    (y, k_cache, v_cache, k_scale, v_scale)."""
     b = x.shape[0]
     per_slot = jnp.ndim(cache_index) > 0
     pos = decode_positions(cache_index, b)
     q, k, v = project_qkv(p, cfg, x, x, pos[:, None], pos[:, None], rope=rope)
+    quantized = k_scale is not None
+    assert not quantized or page_table is not None, (
+        "KV scales ride on the paged int8 page format")
     if page_table is not None:
         if mesh is not None:
             from repro.parallel.pagedkv import sharded_paged_decode_attention
-            y, k_cache, v_cache = sharded_paged_decode_attention(
+            out = sharded_paged_decode_attention(
                 mesh, kv_axis, q, k, v, k_cache, v_cache, page_table, pos,
-                decode_impl)
+                decode_impl, k_scale=k_scale, v_scale=v_scale)
+            if quantized:
+                y, k_cache, v_cache, k_scale, v_scale = out
+            else:
+                y, k_cache, v_cache = out
         else:
+            if quantized:
+                from repro.kernels.quant import quantize_kv
+                k, sk = quantize_kv(k)
+                v, sv = quantize_kv(v)
+                k_scale = _scatter_paged_kv(k_scale, sk, page_table, pos)
+                v_scale = _scatter_paged_kv(v_scale, sv, page_table, pos)
             k_cache = _scatter_paged_kv(k_cache, k, page_table, pos)
             v_cache = _scatter_paged_kv(v_cache, v, page_table, pos)
             y = decode_attention(q, k_cache, v_cache, pos,
-                                 page_table=page_table, impl=decode_impl)
+                                 page_table=page_table, impl=decode_impl,
+                                 k_scale=k_scale, v_scale=v_scale)
         y = constrain(y, ("batch", None, None, None, None))
+        if quantized:
+            return output_proj(p, cfg, y), k_cache, v_cache, k_scale, v_scale
         return output_proj(p, cfg, y), k_cache, v_cache
     # Pin the cache sharding (batch over DP, sequence over the model axis —
     # flash-decoding style).  Without this GSPMD may back-propagate the

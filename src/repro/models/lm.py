@@ -103,7 +103,8 @@ class LM:
                    num_pages: Optional[int] = None,
                    prefix_sharing: bool = True,
                    decode_impl: str = "gather",
-                   mesh=None, kv_axis: str = "model"):
+                   mesh=None, kv_axis: str = "model",
+                   kv_dtype: str = "native"):
         """Decode cache construction.
 
         ``backend=None`` (train / dry-run) returns the raw dense pytree —
@@ -114,7 +115,9 @@ class LM:
         rides on the backend and tells decode consumers how to resolve the
         page table ("gather" / "pallas").  ``mesh`` (paged only) shards the
         page pools P/n along the ``kv_pages`` logical axis -> ``kv_axis``
-        mesh axis, padding the pool up to a multiple of the mesh size."""
+        mesh axis, padding the pool up to a multiple of the mesh size.
+        ``kv_dtype="int8"`` (paged only) stores pages int8-quantized with
+        per-row fp32 scales (``repro.serve.kvcache``)."""
         if backend is not None:
             assert not abstract, "managed cache backends are concrete-only"
             from repro.serve.kvcache import make_cache
@@ -123,7 +126,10 @@ class LM:
                               num_pages=num_pages,
                               prefix_sharing=prefix_sharing,
                               decode_impl=decode_impl, mesh=mesh,
-                              kv_axis=kv_axis)
+                              kv_axis=kv_axis, kv_dtype=kv_dtype)
+        assert kv_dtype == "native", (
+            "int8 KV pages are a managed paged-backend format "
+            "(init_cache(backend='paged', kv_dtype='int8'))")
         if self.is_encdec:
             return encdec.init_cache(self.cfg, batch_size, max_seq,
                                      enc_len or max_seq // self.cfg.enc_ratio,

@@ -429,10 +429,23 @@ def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
 
         if fam in ("dense", "vlm", "moe"):
             a_in = apply_norm(lp["ln1"], h, cfg)
-            a, nk, nv = attn.attention_decode_block(
-                lp["attn"], cfg, a_in, layer_cache["k"], layer_cache["v"],
-                cache_index, page_table=page_table, decode_impl=decode_impl,
-                mesh=mesh, kv_axis=kv_axis)
+            if "k_scale" in layer_cache:
+                # int8 paged pools: quantize-on-write + dequant-on-read
+                # inside the attention block; scales ride the cache pytree
+                a, nk, nv, nks, nvs = attn.attention_decode_block(
+                    lp["attn"], cfg, a_in, layer_cache["k"],
+                    layer_cache["v"], cache_index, page_table=page_table,
+                    decode_impl=decode_impl, mesh=mesh, kv_axis=kv_axis,
+                    k_scale=layer_cache["k_scale"],
+                    v_scale=layer_cache["v_scale"])
+                new_cache = {"k": nk, "v": nv,
+                             "k_scale": nks, "v_scale": nvs}
+            else:
+                a, nk, nv = attn.attention_decode_block(
+                    lp["attn"], cfg, a_in, layer_cache["k"],
+                    layer_cache["v"], cache_index, page_table=page_table,
+                    decode_impl=decode_impl, mesh=mesh, kv_axis=kv_axis)
+                new_cache = {"k": nk, "v": nv}
             h = h + a
             f_in = apply_norm(lp["ln2"], h, cfg)
             if "moe" in lp:
@@ -440,7 +453,6 @@ def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
             else:
                 f = mlp_mod.mlp(lp["mlp"], cfg, f_in)
             h = h + f
-            new_cache = {"k": nk, "v": nv}
         elif fam == "ssm":
             x = apply_norm(lp["ln1"], h, cfg)
             y, (s1, wkv) = rwkv6.tmix_block(lp["tmix"], cfg, x,
@@ -550,13 +562,22 @@ def prefill_chunk(params, cfg, tokens, cache, start_pos, dest, last_pos,
     def body(h, xs):
         lp, layer_cache = xs
         a_in = apply_norm(lp["ln1"], h, cfg)
-        a, nk, nv = attn.attention_prefill_chunk_block(
-            lp["attn"], cfg, a_in, layer_cache["k"], layer_cache["v"],
-            start_pos, dest, page_table, last_pos)
+        if "k_scale" in layer_cache:
+            a, nk, nv, nks, nvs = attn.attention_prefill_chunk_block(
+                lp["attn"], cfg, a_in, layer_cache["k"], layer_cache["v"],
+                start_pos, dest, page_table, last_pos,
+                k_scale=layer_cache["k_scale"],
+                v_scale=layer_cache["v_scale"])
+            new_cache = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
+        else:
+            a, nk, nv = attn.attention_prefill_chunk_block(
+                lp["attn"], cfg, a_in, layer_cache["k"], layer_cache["v"],
+                start_pos, dest, page_table, last_pos)
+            new_cache = {"k": nk, "v": nv}
         h = h + a
         f_in = apply_norm(lp["ln2"], h, cfg)
         h = h + mlp_mod.mlp(lp["mlp"], cfg, f_in)
-        return h, {"k": nk, "v": nv}
+        return h, new_cache
 
     h, new_layers = _scan_or_unroll(
         body, h, (params["layers"], cache["layers"]), cfg.num_layers,

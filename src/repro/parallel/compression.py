@@ -19,22 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.kernels.quant import dequantize, quantize_int8  # noqa: F401  (re-export: the int8 wire format lives in repro.kernels.quant, shared with the quantized KV page path)
 from repro.parallel.sharding import shard_map
-
-
-def quantize_int8(x, seed_err=None):
-    """Symmetric per-tensor int8 quantization with error feedback input."""
-    xf = x.astype(jnp.float32)
-    if seed_err is not None:
-        xf = xf + seed_err
-    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
-    err = xf - q.astype(jnp.float32) * scale
-    return q, scale, err
-
-
-def dequantize(q, scale):
-    return q.astype(jnp.float32) * scale
 
 
 def compressed_allreduce_mean(x, err, *, axis: str):

@@ -43,6 +43,11 @@ from repro.parallel.sharding import default_rules, shard_map, spec_for
 # each chip holds whole pages (the kernel's block unit)
 POOL_LOGICAL_AXES = ("layers", "kv_pages", None, None, None)
 
+# the int8 page format's scale arrays (L, P, page, KV) drop the D axis but
+# keep the page-partitioned leading dims: each chip holds exactly the scales
+# of the pages it owns, so local dequant never reads a remote scale
+SCALE_LOGICAL_AXES = POOL_LOGICAL_AXES[:4]
+
 
 def kv_pool_spec(mesh, pool_shape, rules=None,
                  axis: str = None) -> PartitionSpec:
@@ -62,9 +67,26 @@ def kv_pool_sharding(mesh, pool_shape, rules=None,
     return NamedSharding(mesh, kv_pool_spec(mesh, pool_shape, rules, axis))
 
 
+def kv_scale_spec(mesh, scale_shape, rules=None,
+                  axis: str = None) -> PartitionSpec:
+    """PartitionSpec for a (L, P, page, KV) scale array: same ``kv_pages``
+    partitioning as its pool, minus the D axis."""
+    rules = dict(rules if rules is not None
+                 else default_rules(mesh.axis_names))
+    if axis is not None:
+        rules["kv_pages"] = axis
+    return spec_for(SCALE_LOGICAL_AXES, scale_shape, rules, mesh)
+
+
+def kv_scale_sharding(mesh, scale_shape, rules=None,
+                      axis: str = None) -> NamedSharding:
+    return NamedSharding(mesh, kv_scale_spec(mesh, scale_shape, rules, axis))
+
+
 def sharded_paged_decode_attention(mesh, axis: str, q, k_new, v_new,
                                    k_pool, v_pool, page_table, positions,
-                                   decode_impl: str = "gather"):
+                                   decode_impl: str = "gather",
+                                   k_scale=None, v_scale=None):
     """One layer's sharded paged decode: scatter the new token into the
     owning chip's pool shard, compute per-chip softmax partials, merge.
 
@@ -76,7 +98,15 @@ def sharded_paged_decode_attention(mesh, axis: str, q, k_new, v_new,
     ``decode_impl`` picks the per-chip partial producer: ``"pallas"`` (the
     page-table-walking kernel with its local window) or ``"gather"`` (XLA
     local-masked gather) — both feed the identical merge, so the two impls
-    stay in parity sharded exactly as they do on one chip."""
+    stay in parity sharded exactly as they do on one chip.
+
+    ``k_scale``/``v_scale`` (quantized int8 pools): (P, page, KV) fp32
+    scale arrays sharded exactly like the pools.  The new token's float K/V
+    is quantized *inside* the shard_map body (replicated, deterministic —
+    every chip computes the identical (q, scale) pair) and the owning chip
+    commits both the int8 row and its scale with the same ``mode="drop"``
+    routing; the partial producers then dequantize locally.  Returns a
+    5-tuple ``(y, k_pool, v_pool, k_scale, v_scale)``."""
     from repro.kernels import ops as kops
     from repro.models import attention as attn
 
@@ -86,21 +116,46 @@ def sharded_paged_decode_attention(mesh, axis: str, q, k_new, v_new,
         f"page pool P={p_total} must divide the {axis!r} axis ({n}); "
         "PagedCache pads the pool up to a multiple of the mesh size")
     pn = p_total // n
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), "k/v scales travel together"
+
+    def partials(q, kp, vp, pt, pos, off, ks, vs):
+        if decode_impl == "pallas":
+            return kops.paged_decode_partials(q, kp, vp, pt, pos, off,
+                                              k_scale=ks, v_scale=vs)
+        assert decode_impl == "gather", decode_impl
+        return attn.paged_gather_partials(q, kp, vp, pt, pos, off,
+                                          k_scale=ks, v_scale=vs)
 
     def body(q, kn, vn, pt, pos, kp, vp):
         off = (jax.lax.axis_index(axis) * pn).astype(jnp.int32)
         kp = attn.scatter_paged_kv_local(kp, kn, pt, pos, off)
         vp = attn.scatter_paged_kv_local(vp, vn, pt, pos, off)
-        if decode_impl == "pallas":
-            acc, l, m = kops.paged_decode_partials(q, kp, vp, pt, pos, off)
-        else:
-            assert decode_impl == "gather", decode_impl
-            acc, l, m = attn.paged_gather_partials(q, kp, vp, pt, pos, off)
+        acc, l, m = partials(q, kp, vp, pt, pos, off, None, None)
         y = attn.merge_paged_partials(acc, l, m, axis).astype(q.dtype)
         return y, kp, vp
 
+    def body_quant(q, kn, vn, pt, pos, kp, vp, ks, vs):
+        from repro.kernels.quant import quantize_kv
+        off = (jax.lax.axis_index(axis) * pn).astype(jnp.int32)
+        qk, sk = quantize_kv(kn)
+        qv, sv = quantize_kv(vn)
+        kp = attn.scatter_paged_kv_local(kp, qk, pt, pos, off)
+        vp = attn.scatter_paged_kv_local(vp, qv, pt, pos, off)
+        ks = attn.scatter_paged_kv_local(ks, sk, pt, pos, off)
+        vs = attn.scatter_paged_kv_local(vs, sv, pt, pos, off)
+        acc, l, m = partials(q, kp, vp, pt, pos, off, ks, vs)
+        y = attn.merge_paged_partials(acc, l, m, axis).astype(q.dtype)
+        return y, kp, vp, ks, vs
+
     rep = PartitionSpec()
     sh = PartitionSpec(axis)
+    if quantized:
+        fn = shard_map(body_quant, mesh=mesh,
+                       in_specs=(rep, rep, rep, rep, rep, sh, sh, sh, sh),
+                       out_specs=(rep, sh, sh, sh, sh), check_vma=False)
+        return fn(q, k_new, v_new, page_table, positions, k_pool, v_pool,
+                  k_scale, v_scale)
     fn = shard_map(body, mesh=mesh,
                    in_specs=(rep, rep, rep, rep, rep, sh, sh),
                    out_specs=(rep, sh, sh), check_vma=False)

@@ -162,7 +162,8 @@ class ServeEngine:
                  prefix_sharing: bool = True,
                  decode_impl: str = "gather",
                  mesh=None, kv_axis: str = "model",
-                 prefill_chunk: int = 0, prefill_budget: int = 0):
+                 prefill_chunk: int = 0, prefill_budget: int = 0,
+                 kv_dtype: str = "native"):
         # per-slot positions rely on masked-then-overwritten cache writes,
         # which holds for attention KV caches but not recurrent state
         assert lm.cfg.family in ("dense", "moe", "vlm"), (
@@ -184,7 +185,7 @@ class ServeEngine:
                                 num_pages=num_pages,
                                 prefix_sharing=prefix_sharing,
                                 decode_impl=decode_impl, mesh=mesh,
-                                kv_axis=kv_axis)
+                                kv_axis=kv_axis, kv_dtype=kv_dtype)
         # chunked prefill: C-token chunks interleaved with decode, at most
         # `budget` prefill tokens per engine iteration (0 = whole-prompt)
         self.chunk = int(prefill_chunk)
@@ -279,6 +280,12 @@ class ServeEngine:
         g("serve_kv_bytes_per_chip", "pinned cache bytes per mesh chip")
         g("serve_decode_transient_bytes",
           "per-step transient of the paged KV read path, one layer")
+        g("serve_kv_quant_enabled",
+          "1 when the cache stores int8 quantized KV pages")
+        g("serve_kv_quant_scale_bytes",
+          "HBM pinned by the int8 page format's fp32 scale arrays")
+        g("serve_kv_quant_bytes_saved",
+          "pool bytes saved by int8 pages vs the compute-dtype pool")
 
     # ---------------------------------------------------------- jit builds ----
     def _make_fused(self):
@@ -691,8 +698,19 @@ class ServeEngine:
             from repro.serve.kvcache import decode_transient_bytes
             transient = decode_transient_bytes(
                 self.lm.cfg, self.B, self.kv.max_pages, st.page_size,
-                self.kv.dtype, self.kv.decode_impl)
+                self.kv.dtype, self.kv.decode_impl, kv_dtype=st.kv_dtype)
         self.reg.gauge("serve_decode_transient_bytes").set(transient)
+        quant = st.kv_dtype == "int8"
+        self.reg.gauge("serve_kv_quant_enabled").set(int(quant))
+        self.reg.gauge("serve_kv_quant_scale_bytes").set(st.bytes_scales)
+        saved = 0
+        if quant:
+            from repro.serve.kvcache import page_kv_bytes
+            dense_total = page_kv_bytes(
+                self.lm.cfg, st.page_size, self.kv.dtype) \
+                * (st.pages_total + 1)
+            saved = dense_total - st.bytes_total
+        self.reg.gauge("serve_kv_quant_bytes_saved").set(saved)
 
     def run_until_drained(self, max_iters: int = 10_000) -> List[Request]:
         for _ in range(max_iters):

@@ -57,11 +57,22 @@ import numpy as np
 
 # ------------------------------------------------------------- byte math ----
 
-def kv_position_bytes(cfg, dtype) -> int:
-    """Bytes of K+V cache per token position (all layers)."""
-    itemsize = jnp.dtype(dtype).itemsize
-    return 2 * cfg.num_layers * cfg.num_kv_heads * cfg.resolved_head_dim \
-        * itemsize
+#: fp32 bytes of the per-row-per-KV-head scale the int8 page format stores
+#: next to each quantized K/V row (``repro.kernels.quant.quantize_kv``).
+SCALE_BYTES = 4
+
+
+def kv_position_bytes(cfg, dtype, kv_dtype: str = "native") -> int:
+    """Bytes of K+V cache per token position (all layers).
+
+    ``kv_dtype="int8"``: each of the 2·L·KV rows stores head_dim int8
+    elements plus one fp32 absmax scale — ``2·L·KV·(D + 4)`` bytes per
+    position instead of ``2·L·KV·D·itemsize``."""
+    l, kvh, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    if kv_dtype == "int8":
+        return 2 * l * kvh * (hd + SCALE_BYTES)
+    assert kv_dtype == "native", kv_dtype
+    return 2 * l * kvh * hd * jnp.dtype(dtype).itemsize
 
 
 def contiguous_kv_bytes(cfg, batch: int, max_seq: int, dtype) -> int:
@@ -69,13 +80,15 @@ def contiguous_kv_bytes(cfg, batch: int, max_seq: int, dtype) -> int:
     return batch * max_seq * kv_position_bytes(cfg, dtype)
 
 
-def page_kv_bytes(cfg, page_size: int, dtype) -> int:
-    """HBM of one physical page (all layers, K+V)."""
-    return page_size * kv_position_bytes(cfg, dtype)
+def page_kv_bytes(cfg, page_size: int, dtype,
+                  kv_dtype: str = "native") -> int:
+    """HBM of one physical page (all layers, K+V, incl. int8 scales)."""
+    return page_size * kv_position_bytes(cfg, dtype, kv_dtype)
 
 
 def decode_transient_bytes(cfg, batch: int, max_pages: int, page_size: int,
-                           dtype, decode_impl: str = "gather") -> int:
+                           dtype, decode_impl: str = "gather",
+                           kv_dtype: str = "native") -> int:
     """Per-decode-step transient bytes of the paged KV *read* path, one
     layer's worth (the layer scan reuses the buffer).
 
@@ -83,13 +96,24 @@ def decode_transient_bytes(cfg, batch: int, max_pages: int, page_size: int,
     (B, M*page, KV, D) each — the transient grows with the paged-enlarged
     concurrent batch.  ``"pallas"``: each (slot, kv-head) program of the
     page-table-walking kernel streams one (page, D) K and V tile into VMEM
-    plus fp32 online-softmax state — O(page), independent of B and M."""
+    plus fp32 online-softmax state — O(page), independent of B and M.
+
+    ``kv_dtype="int8"``: the gather twin additionally materializes the
+    gathered scale views and the dequantized compute-dtype K/V (the int8
+    gather shrinks but the dequant expands to ``dtype``); the kernel
+    streams the int8 tile + its (page,) scale rows and dequantizes
+    in-register, so its transient *shrinks* with the narrow wire format."""
     itemsize = jnp.dtype(dtype).itemsize
     kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     if decode_impl == "gather":
-        return 2 * batch * max_pages * page_size * kvh * hd * itemsize
+        rows = 2 * batch * max_pages * page_size * kvh
+        if kv_dtype == "int8":
+            return rows * (hd + SCALE_BYTES) + rows * hd * itemsize
+        return rows * hd * itemsize
     assert decode_impl == "pallas", decode_impl
     g = cfg.num_heads // kvh
+    if kv_dtype == "int8":
+        return 2 * page_size * (hd + SCALE_BYTES) + 4 * g * (hd + 2)
     return 2 * page_size * hd * itemsize + 4 * g * (hd + 2)
 
 
@@ -106,6 +130,8 @@ class MemoryStats:
     pages_shared: int = 0     # pages with refcount > 1 (prefix sharing)
     mesh_chips: int = 1       # devices the pool is kv_pages-sharded over
     bytes_per_chip: int = 0   # pinned bytes each chip holds (= total / chips)
+    kv_dtype: str = "native"  # page element format ("native" / "int8")
+    bytes_scales: int = 0     # portion of bytes_total pinned by int8 scales
 
 
 class KVCache(Protocol):
@@ -166,6 +192,8 @@ class ContiguousCache:
     decode_impl = "gather"      # dense rows have no page table to resolve
     mesh = None                 # dense rows have no kv_pages dim to shard
     kv_axis = "model"
+    kv_dtype = "native"         # int8 pages are a paged-format feature
+    quantized = False
 
     def __init__(self, lm, batch: int, max_seq: int, dtype=jnp.bfloat16):
         self.cfg = lm.cfg
@@ -261,13 +289,17 @@ class PagedCache:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefix_sharing: bool = True, decode_impl: str = "gather",
                  mesh=None, kv_axis: str = "model",
-                 locality_chips: Optional[int] = None):
+                 locality_chips: Optional[int] = None,
+                 kv_dtype: str = "native"):
         cfg = lm.cfg
         assert cfg.family in ("dense", "vlm", "moe"), (
             "paged KV is attention-cache families only "
             f"(family={cfg.family})")
         assert decode_impl in ("gather", "pallas"), decode_impl
+        assert kv_dtype in ("native", "int8"), kv_dtype
         self.decode_impl = decode_impl
+        self.kv_dtype = kv_dtype
+        self.quantized = kv_dtype == "int8"
         self.cfg, self.B, self.S = cfg, batch, max_seq
         self.page = page_size
         self.max_pages = -(-max_seq // page_size)              # M, per slot
@@ -295,18 +327,34 @@ class PagedCache:
         self.prefix_sharing = prefix_sharing
         L, kvh, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
         pool_shape = (L, num_pages, page_size, kvh, hd)
-        self._pool_sharding = None
+        scale_shape = pool_shape[:4]        # one fp32 scale per (pos, head)
+        self._pool_sharding = self._scale_sharding = None
         if mesh is not None:
-            from repro.parallel.pagedkv import kv_pool_sharding
+            from repro.parallel.pagedkv import (kv_pool_sharding,
+                                                kv_scale_sharding)
             self._pool_sharding = kv_pool_sharding(mesh, pool_shape,
                                                    axis=kv_axis)
+            if self.quantized:
+                self._scale_sharding = kv_scale_sharding(mesh, scale_shape,
+                                                         axis=kv_axis)
+
+        def alloc_z(shape, dt, sharding):
+            z = jnp.zeros(shape, dt)
+            return jax.device_put(z, sharding) if sharding is not None else z
 
         def pool():
-            z = jnp.zeros(pool_shape, dtype)
-            return (jax.device_put(z, self._pool_sharding)
-                    if self._pool_sharding is not None else z)
+            return alloc_z(pool_shape, jnp.int8 if self.quantized else dtype,
+                           self._pool_sharding)
 
         self.state = {"layers": {"k": pool(), "v": pool()}}
+        if self.quantized:
+            # per-page-row-per-KV-head fp32 absmax scales, stored alongside
+            # the int8 pools so decode_view hands them to the dispatch as
+            # part of the same donated layers subtree
+            self.state["layers"]["k_scale"] = alloc_z(
+                scale_shape, jnp.float32, self._scale_sharding)
+            self.state["layers"]["v_scale"] = alloc_z(
+                scale_shape, jnp.float32, self._scale_sharding)
         self.page_table = np.zeros((batch, self.max_pages), np.int32)
         self._page_table_dev = None      # device copy, invalidated on mutation
         # per-chip free stacks, pop() handing out the lowest id of the chip;
@@ -594,17 +642,30 @@ class PagedCache:
         sharded pool the result is constrained back to the ``kv_pages``
         sharding so the prefill dispatch doesn't leave a replicated pool
         behind (GSPMD partitions the scatter itself).
-        """
+
+        Quantized pools (``kv_dtype="int8"``): the float K/V block is
+        quantized here — inside the staged (jit-traced) write, so prefill
+        stays one dispatch — and the per-row scales scatter into the scale
+        arrays through the *same* flat indices (a scale array is just a
+        pool with no D axis)."""
         def write(pool, small):
             p, pg = pool.shape[1], pool.shape[2]
             flat = pool.reshape(pool.shape[0], p * pg, *pool.shape[3:])
             flat = flat.at[:, dest].set(small.astype(pool.dtype))
             out = flat.reshape(pool.shape)
-            if self._pool_sharding is not None:
-                out = jax.lax.with_sharding_constraint(
-                    out, self._pool_sharding)
+            sharding = (self._pool_sharding if pool.ndim == 5
+                        else self._scale_sharding)
+            if sharding is not None:
+                out = jax.lax.with_sharding_constraint(out, sharding)
             return out
 
+        if self.quantized:
+            from repro.kernels.quant import quantize_kv
+            block = {}
+            for name in ("k", "v"):
+                q, s = quantize_kv(kv_block[name])
+                block[name], block[name + "_scale"] = q, s
+            kv_block = block
         return jax.tree.map(write, layers, kv_block)
 
     def write_prefill(self, slot: int, kv_block) -> None:
@@ -670,17 +731,21 @@ class PagedCache:
 
     # ------------------------------------------------------------- stats ----
     def memory_stats(self) -> MemoryStats:
-        pb = page_kv_bytes(self.cfg, self.page, self.dtype)
+        pb = page_kv_bytes(self.cfg, self.page, self.dtype, self.kv_dtype)
         usable = self.P - 1
         in_use = usable - self._free_count()
         sharded = self.chips if self.mesh is not None else 1
+        scale_b = (self.P * self.page * 2 * self.cfg.num_layers
+                   * self.cfg.num_kv_heads * SCALE_BYTES
+                   if self.quantized else 0)
         return MemoryStats(
             backend=self.backend, bytes_total=self.P * pb,
             bytes_reserved=in_use * pb, slots_total=self.B,
             slots_in_use=sum(bool(p) for p in self._slot_pages),
             page_size=self.page, pages_total=usable, pages_in_use=in_use,
             pages_shared=int((self._ref > 1).sum()),
-            mesh_chips=sharded, bytes_per_chip=self.P * pb // sharded)
+            mesh_chips=sharded, bytes_per_chip=self.P * pb // sharded,
+            kv_dtype=self.kv_dtype, bytes_scales=scale_b)
 
 
 # ------------------------------------------------------------- factory ----
@@ -689,13 +754,15 @@ def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
                backend: str = "contiguous", page_size: int = 16,
                num_pages: Optional[int] = None, prefix_sharing: bool = True,
                decode_impl: str = "gather", mesh=None,
-               kv_axis: str = "model"):
+               kv_axis: str = "model", kv_dtype: str = "native"):
     """Build a KV-cache backend for ``lm`` (the ``lm.init_cache(backend=...)``
     entry point).  ``decode_impl`` ("gather" / "pallas") rides on the paged
     backend and tells decode consumers how to resolve the page table; the
     contiguous backend has no table and always reports "gather".  ``mesh``
     shards the paged pool P/n over ``kv_axis`` (``kv_pages`` logical axis)
-    with a locality-aware free list."""
+    with a locality-aware free list.  ``kv_dtype="int8"`` (paged only)
+    stores pages quantized with per-row fp32 scales — quantize-on-write,
+    dequantize-on-read in both decode impls."""
     if backend == "contiguous":
         if decode_impl != "gather":
             raise ValueError(
@@ -707,6 +774,11 @@ def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
                 "kv_pages sharding partitions the paged pool's page dim; "
                 "the contiguous layout has no page dim (use backend='paged' "
                 "to serve over a mesh)")
+        if kv_dtype != "native":
+            raise ValueError(
+                "the int8 page format quantizes fixed-size pages with "
+                "per-row scales; the contiguous layout has no pages (use "
+                f"backend='paged' for kv_dtype={kv_dtype!r})")
         return ContiguousCache(lm, batch, max_seq, dtype=dtype)
     if backend == "paged":
         if lm.is_encdec:
@@ -717,5 +789,5 @@ def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
                           page_size=page_size, num_pages=num_pages,
                           prefix_sharing=prefix_sharing,
                           decode_impl=decode_impl, mesh=mesh,
-                          kv_axis=kv_axis)
+                          kv_axis=kv_axis, kv_dtype=kv_dtype)
     raise ValueError(f"unknown KV-cache backend {backend!r}")

@@ -38,16 +38,19 @@ def _ragged_requests(cfg, n, seed=5, lo=2, hi=10, new_lo=4, new_hi=9):
 
 # ------------------------------------------------------ exact logit parity ----
 
-def test_paged_logits_match_contiguous_exactly_ragged_8slot():
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["float32", "bfloat16"])
+def test_paged_logits_match_contiguous_exactly_ragged_8slot(dtype):
     """Eight slots at eight different depths: the paged decode (scatter via
     page table + gather over pages) must produce bitwise-identical logits to
-    the dense (B, Smax) layout."""
+    the dense (B, Smax) layout — in both cache storage dtypes (bf16 rows
+    round identically through both layouts, so parity stays bitwise)."""
     cfg, lm, params = small_lm()
     B, S, pg = 8, 32, 8
     rng = np.random.default_rng(7)
     lens = [3, 11, 7, 1, 14, 5, 9, 2]
-    contig = lm.init_cache(B, S, dtype=jnp.float32, backend="contiguous")
-    paged = lm.init_cache(B, S, dtype=jnp.float32, backend="paged",
+    contig = lm.init_cache(B, S, dtype=dtype, backend="contiguous")
+    paged = lm.init_cache(B, S, dtype=dtype, backend="paged",
                           page_size=pg)
     for b, plen in enumerate(lens):
         prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
@@ -347,3 +350,145 @@ def test_encdec_rejects_paged_backend():
     lm = LM(cfg)
     with pytest.raises(NotImplementedError, match="paged"):
         lm.init_cache(2, 32, dtype=jnp.float32, backend="paged")
+
+
+# ------------------------------------------------------- int8 KV pages ----
+
+def test_int8_pool_format_and_memory_accounting():
+    """The int8 page format: int8 pools + per-row fp32 scale arrays in the
+    same layers subtree, with the byte math (`page_kv_bytes`,
+    `memory_stats`) accounting for both."""
+    from repro.serve.kvcache import SCALE_BYTES, kv_position_bytes
+
+    cfg, lm, params = small_lm()
+    kv = lm.init_cache(2, 32, dtype=jnp.float32, backend="paged",
+                       page_size=8, num_pages=9, kv_dtype="int8")
+    assert kv.quantized and kv.kv_dtype == "int8"
+    layers = kv.state["layers"]
+    assert set(layers) == {"k", "v", "k_scale", "v_scale"}
+    assert layers["k"].dtype == jnp.int8
+    assert layers["k_scale"].dtype == jnp.float32
+    assert layers["k_scale"].shape == layers["k"].shape[:-1]
+    L, kvh, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    assert kv_position_bytes(cfg, jnp.float32, "int8") == \
+        2 * L * kvh * (hd + SCALE_BYTES)
+    pb = page_kv_bytes(cfg, 8, jnp.float32, kv_dtype="int8")
+    st = kv.memory_stats()
+    assert st.kv_dtype == "int8"
+    assert st.bytes_total == 9 * pb
+    assert st.bytes_scales == 9 * 8 * 2 * L * kvh * 4
+    # the position-per-byte win vs the native pool this cache replaces
+    assert page_kv_bytes(cfg, 8, jnp.float32) / pb > 3
+    kv.alloc(0, 9)                                  # 2 pages
+    assert kv.memory_stats().bytes_reserved == 2 * pb
+
+
+def test_int8_rejected_off_paged_backend():
+    cfg, lm, params = small_lm()
+    with pytest.raises(ValueError, match="int8"):
+        lm.init_cache(2, 32, dtype=jnp.float32, backend="contiguous",
+                      kv_dtype="int8")
+    with pytest.raises(AssertionError, match="paged"):
+        lm.init_cache(2, 32, dtype=jnp.float32, kv_dtype="int8")
+
+
+@pytest.mark.parametrize("impl", ["gather", "pallas"])
+def test_int8_decode_logits_close_to_fp32_oracle(impl):
+    """Quality gate at the logit level: the ragged 8-slot workload decoded
+    off int8 pages must match the fp32 paged oracle within the quantization
+    tolerance — and pick the same greedy token everywhere — on both decode
+    impls, through two chained steps (the second consumes a quantized
+    scatter-written decode token)."""
+    cfg, lm, params = small_lm()
+    B, S, pg = 8, 32, 8
+    rng = np.random.default_rng(7)
+    lens = [3, 11, 7, 1, 14, 5, 9, 2]
+
+    def build(kv_dtype):
+        kv = lm.init_cache(B, S, dtype=jnp.float32, backend="paged",
+                           page_size=pg, decode_impl=impl,
+                           kv_dtype=kv_dtype)
+        rng2 = np.random.default_rng(7)
+        for b, plen in enumerate(lens):
+            prompt = rng2.integers(0, cfg.vocab_size, plen).astype(np.int32)
+            assert kv.alloc(b, plen + 4, prefix=prompt) == 0
+            _, _, pc = lm.forward(params,
+                                  {"tokens": jnp.asarray(prompt[None])},
+                                  collect_cache=True)
+            kv.write_prefill(b, pc["layers"])
+        return kv
+
+    oracle, quant = build("native"), build("int8")
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
+    pos = jnp.asarray(np.array(lens, np.int32))
+    for step in range(2):
+        lo, co = lm.decode_step(params, toks, oracle.decode_view(), pos,
+                                decode_impl=impl)
+        lq, cq = lm.decode_step(params, toks, quant.decode_view(), pos,
+                                decode_impl=impl)
+        lo, lq = np.asarray(lo), np.asarray(lq)
+        # the documented end-to-end bound (benchmarks.bench_serving
+        # asserts the same constant over its full workload)
+        assert np.abs(lq - lo).max() <= 0.05, (step, np.abs(lq - lo).max())
+        np.testing.assert_array_equal(
+            lo[..., :cfg.vocab_size].argmax(-1),
+            lq[..., :cfg.vocab_size].argmax(-1), err_msg=f"step {step}")
+        oracle.update(co), quant.update(cq)
+        pos = pos + 1
+
+
+def test_int8_engine_greedy_stream_parity_and_telemetry():
+    """End-to-end quality gate: int8 engines (both decode impls, plus
+    chunked prefill) emit bitwise the fp32 engine's greedy streams, and the
+    quant telemetry gauges report the format."""
+    cfg, lm, params = small_lm("qwen3-4b")
+    reqs = _ragged_requests(cfg, 10, seed=29)
+
+    def run(**kw):
+        eng = ServeEngine(lm, params, max_batch=4, max_seq=32,
+                          cache_backend="paged", page_size=4, **kw)
+        for r in reqs:
+            eng.submit(Request(r.id, r.prompt,
+                               max_new_tokens=r.max_new_tokens))
+        return {r.id: r.out_tokens for r in eng.run_until_drained()}, eng
+
+    ref, ref_eng = run()
+    assert len(ref) == 10
+    for kw in (dict(kv_dtype="int8"),
+               dict(kv_dtype="int8", decode_impl="pallas"),
+               dict(kv_dtype="int8", prefill_chunk=4)):
+        out, eng = run(**kw)
+        assert out == ref, kw
+        st = eng.kv.memory_stats()
+        assert st.kv_dtype == "int8" and st.bytes_scales > 0
+        assert eng.reg.gauge("serve_kv_quant_enabled").get() == 1
+        assert eng.reg.gauge("serve_kv_quant_scale_bytes").get() == \
+            st.bytes_scales
+        assert eng.reg.gauge("serve_kv_quant_bytes_saved").get() > 0
+        # quantized pool pins fewer bytes than the fp32 pool it replaces
+        assert st.bytes_total < ref_eng.kv.memory_stats().bytes_total
+    assert ref_eng.reg.gauge("serve_kv_quant_enabled").get() == 0
+
+
+def test_int8_prefix_sharing_and_tight_pool_parity():
+    """Admission control and prefix sharing are format-agnostic: a tight
+    int8 pool defers/recycles exactly like fp32 and still matches the
+    unconstrained contiguous engine's streams."""
+    cfg, lm, params = small_lm()
+    reqs = _ragged_requests(cfg, 8, seed=13, lo=2, hi=8, new_lo=3, new_hi=6)
+    tight = ServeEngine(lm, params, max_batch=4, max_seq=32,
+                        cache_backend="paged", page_size=4, num_pages=7,
+                        kv_dtype="int8")
+    for r in reqs:
+        tight.submit(Request(r.id, r.prompt, max_new_tokens=r.max_new_tokens))
+    tight_out = {r.id: r.out_tokens for r in tight.run_until_drained()}
+    assert len(tight_out) == 8
+    assert tight.reg.counter("serve_admission_deferred_total").get() > 0
+
+    contig = ServeEngine(lm, params, max_batch=4, max_seq=32,
+                         cache_backend="contiguous")
+    for r in reqs:
+        contig.submit(Request(r.id, r.prompt,
+                              max_new_tokens=r.max_new_tokens))
+    contig_out = {r.id: r.out_tokens for r in contig.run_until_drained()}
+    assert tight_out == contig_out

@@ -119,6 +119,108 @@ def test_kernel_fuzz_random_shapes_three_way():
                                    **TOL)
 
 
+def test_kernel_quantized_matches_ref_and_float_pool():
+    """Int8 pools with per-row scales: the kernel's in-register dequant must
+    match the dequantizing gather oracle within kernel tolerance, and both
+    must track the original float pool within the quantization error bound.
+    Positions cover the same page boundaries as the float sweep."""
+    from repro.kernels.quant import quantize_kv
+
+    rng = np.random.default_rng(5)
+    B, KV, G, D, page, M = 6, 2, 3, 16, 4, 3
+    P = B * M + 1
+    q = jnp.asarray(rng.normal(size=(B, 1, KV, G, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, page, KV, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, page, KV, D)), jnp.float32)
+    kq, ks = quantize_kv(kp)
+    vq, vs = quantize_kv(vp)
+    assert ks.shape == (P, page, KV)
+    pt = jnp.asarray(rng.integers(1, P, (B, M)), jnp.int32)
+    pos = jnp.asarray([0, page - 1, page, 2 * page - 1, 2 * page,
+                       M * page - 1], jnp.int32)
+    o = kops.paged_decode_attention(q, kq, vq, pt, pos, k_scale=ks,
+                                    v_scale=vs)
+    o_ref = paged_decode_ref(q[:, 0], kq, vq, pt, pos, k_scale=ks,
+                             v_scale=vs)
+    np.testing.assert_allclose(np.asarray(o[:, 0]), np.asarray(o_ref), **TOL)
+    # and the quantized result stays near the float-pool softmax: per-element
+    # K/V error is <= absmax/254, attention smooths it well under 2%
+    o_float = paged_decode_ref(q[:, 0], kp, vp, pt, pos)
+    np.testing.assert_allclose(np.asarray(o[:, 0]), np.asarray(o_float),
+                               rtol=0.05, atol=0.02)
+
+
+def test_kernel_quantized_dead_pages_and_scratch():
+    """Poisoned dead pages — including poisoned *scales* — must not leak
+    into a quantized walk, and scratch-routed slots stay finite."""
+    from repro.kernels.quant import quantize_kv
+
+    rng = np.random.default_rng(6)
+    B, KV, G, D, page, M, P = 2, 1, 2, 8, 4, 4, 8
+    q = jnp.asarray(rng.normal(size=(B, 1, KV, G, D)), jnp.float32)
+    kq, ks = quantize_kv(jnp.asarray(rng.normal(size=(P, page, KV, D)),
+                                     jnp.float32))
+    vq, vs = quantize_kv(jnp.asarray(rng.normal(size=(P, page, KV, D)),
+                                     jnp.float32))
+    ks = ks.at[7].set(1e30)                  # poisoned scale on a dead page
+    vs = vs.at[7].set(jnp.nan)
+    pos = jnp.asarray([2, 5], jnp.int32)
+    live = jnp.asarray([[1, 2, 0, 0], [3, 4, 0, 0]], jnp.int32)
+    dead = jnp.asarray([[1, 7, 7, 7], [3, 4, 7, 7]], jnp.int32)
+    o_live = kops.paged_decode_attention(q, kq, vq, live, pos, k_scale=ks,
+                                         v_scale=vs)
+    o_dead = kops.paged_decode_attention(q, kq, vq, dead, pos, k_scale=ks,
+                                         v_scale=vs)
+    assert np.isfinite(np.asarray(o_dead)).all()
+    np.testing.assert_allclose(np.asarray(o_dead), np.asarray(o_live), **TOL)
+
+
+def test_quantized_partials_kernel_vs_gather():
+    """Sharded int8 building block: the kernel's partial triple over a local
+    pool shard (with local scale shards) matches the gather partials, and
+    the two-chip merge reconstructs the full quantized softmax."""
+    from repro.kernels.quant import quantize_kv
+    from repro.models.attention import (decode_attention,
+                                        paged_gather_partials)
+
+    rng = np.random.default_rng(9)
+    B, KV, G, D, page, M, P = 3, 2, 2, 8, 4, 3, 12
+    q = jnp.asarray(rng.normal(size=(B, 1, KV, G, D)), jnp.float32)
+    kq, ks = quantize_kv(jnp.asarray(rng.normal(size=(P, page, KV, D)),
+                                     jnp.float32))
+    vq, vs = quantize_kv(jnp.asarray(rng.normal(size=(P, page, KV, D)),
+                                     jnp.float32))
+    pt = jnp.asarray(rng.integers(1, P, (B, M)), jnp.int32)
+    pos = jnp.asarray([0, 5, 11], jnp.int32)
+    half = P // 2
+
+    def window(c):
+        s = slice(c * half, (c + 1) * half)
+        return kq[s], vq[s], ks[s], vs[s], jnp.int32(c * half)
+
+    parts = []
+    for c in range(2):
+        kw, vw, ksw, vsw, off = window(c)
+        g = paged_gather_partials(q, kw, vw, pt, pos, off, k_scale=ksw,
+                                  v_scale=vsw)
+        k = kops.paged_decode_partials(q, kw, vw, pt, pos, off, k_scale=ksw,
+                                       v_scale=vsw)
+        np.testing.assert_allclose(np.asarray(k[1]), np.asarray(g[1]), **TOL)
+        np.testing.assert_allclose(np.asarray(k[2]), np.asarray(g[2]), **TOL)
+        np.testing.assert_allclose(np.asarray(k[0]), np.asarray(g[0]),
+                                   rtol=2e-4, atol=2e-4)
+        parts.append(g)
+    ms = jnp.stack([m for _, _, m in parts])
+    gm = ms.max(axis=0)
+    num = sum(acc * jnp.exp(m - gm)[:, None, :, :, None]
+              for acc, _, m in parts)
+    den = sum(l * jnp.exp(m - gm) for _, l, m in parts)
+    merged = num / jnp.maximum(den, 1e-30)[:, None, :, :, None]
+    full = decode_attention(q, kq, vq, pos, page_table=pt, impl="gather",
+                            k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(full), **TOL)
+
+
 def test_partials_merge_matches_full_softmax_singlehost():
     """The sharded path's building blocks, checked without a mesh: gather
     partials over two half-pools, merged with the partial-softmax formula,

@@ -1,0 +1,141 @@
+"""Shared int8 quantization module (``repro.kernels.quant``): the per-tensor
+error-feedback path the compressed gradient sync uses, and the per-row KV-page
+path the int8 paged cache uses.
+
+The documented contract under test: symmetric absmax quantization with
+``scale = max(absmax, 1e-12) / 127`` keeps every element's round-trip error
+within ``scale / 2 = max(absmax, 1e-12) / 254``, and all-zero (or denormal)
+rows reproduce exactly.  ``tests/test_kvcache.py`` / ``test_paged_decode.py``
+check the same bound end-to-end through the cache and kernels; this file
+checks it at the source."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.quant import (dequantize, dequantize_kv, quantize_int8,
+                                 quantize_kv)
+
+try:                    # optional dev dependency (requirements-dev.txt): the
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True   # numpy sweeps below keep coverage without it
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _row_bound(x):
+    """Per-row error bound: scale/2 with the absmax floor, plus fp32 slack."""
+    absmax = np.max(np.abs(x), axis=-1, keepdims=True)
+    return np.maximum(absmax, 1e-12) / 254 * (1 + 1e-5) + 1e-30
+
+
+# ---------------------------------------------------------- per-row (KV) ----
+
+def test_quantize_kv_shapes_and_dtypes():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(3, 5, 2, 8)),
+                    jnp.float32)
+    q, s = quantize_kv(x)
+    assert q.shape == x.shape and q.dtype == jnp.int8
+    assert s.shape == x.shape[:-1] and s.dtype == jnp.float32
+    y = dequantize_kv(q, s)
+    assert y.shape == x.shape and y.dtype == jnp.float32
+    assert dequantize_kv(q, s, jnp.bfloat16).dtype == jnp.bfloat16
+
+
+def test_quantize_kv_roundtrip_error_bound_random_sweep():
+    """Seeded sweep over magnitudes spanning 1e-30..1e4 (mixed per row):
+    every element round-trips within the documented absmax/254 row bound."""
+    rng = np.random.default_rng(1)
+    for trial in range(20):
+        shape = tuple(rng.integers(1, 6, size=int(rng.integers(2, 5)))) + \
+            (int(rng.integers(1, 33)),)
+        mag = 10.0 ** rng.uniform(-30, 4, size=shape[:-1] + (1,))
+        x = (rng.normal(size=shape) * mag).astype(np.float32)
+        q, s = quantize_kv(jnp.asarray(x))
+        err = np.abs(np.asarray(dequantize_kv(q, s)) - x)
+        assert (err <= _row_bound(x)).all(), (trial, shape, err.max())
+
+
+def test_quantize_kv_zero_and_denormal_rows_exact():
+    """All-zero rows and denormal rows (absmax under the 1e-12 floor) decode
+    to values within scale/2 of the input — for zeros, exactly zero; the
+    floor keeps the scale finite so nothing NaNs or explodes."""
+    x = np.zeros((4, 3, 8), np.float32)
+    x[1] = 1e-40                                    # denormal row
+    x[2] = np.float32(1e-13)                        # under the floor
+    x[3, :, 0] = 5.0                                # one normal row for scale
+    q, s = quantize_kv(jnp.asarray(x))
+    y = np.asarray(dequantize_kv(q, s))
+    assert np.isfinite(y).all() and np.isfinite(np.asarray(s)).all()
+    np.testing.assert_array_equal(y[0], 0.0)        # zeros exact
+    err = np.abs(y - x)
+    assert (err <= _row_bound(x)).all()
+    # denormal rows: the floored scale bounds error at ~4e-15 absolute
+    assert err[1].max() <= 1e-12 / 254 * 1.01 + 1e-40
+
+
+def test_quantize_kv_single_row_write_is_self_contained():
+    """The decode-step property the per-ROW scale layout exists for: one new
+    token's (KV, D) slice quantizes alone to exactly what it quantizes to
+    inside a full page — no neighboring row can perturb its scale."""
+    rng = np.random.default_rng(2)
+    page = rng.normal(size=(8, 2, 16)).astype(np.float32) * 3
+    q_full, s_full = quantize_kv(jnp.asarray(page))
+    q_row, s_row = quantize_kv(jnp.asarray(page[5]))
+    np.testing.assert_array_equal(np.asarray(q_full)[5], np.asarray(q_row))
+    np.testing.assert_array_equal(np.asarray(s_full)[5], np.asarray(s_row))
+
+
+# ------------------------------------------- per-tensor (gradient sync) ----
+
+def test_quantize_int8_roundtrip_and_error_feedback():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(64,)).astype(np.float32)
+    q, scale, err = quantize_int8(jnp.asarray(x))
+    assert q.dtype == jnp.int8 and np.ndim(scale) == 0
+    y = np.asarray(dequantize(q, scale))
+    # error feedback is exactly the round-trip residual: y + err == x
+    np.testing.assert_allclose(y + np.asarray(err), x, rtol=1e-6, atol=1e-7)
+    assert np.abs(y - x).max() <= np.abs(x).max() / 254 * (1 + 1e-5)
+    # carrying the residual into the next step cancels systematic bias
+    q2, scale2, _ = quantize_int8(jnp.asarray(x), seed_err=err)
+    y2 = np.asarray(dequantize(q2, scale2))
+    assert np.abs((y + y2) - 2 * x).max() <= np.abs(x).max() / 254 * 1.01
+
+
+def test_compression_module_reexports_shared_quant():
+    """The gradient-compression path must be the *same* functions — factoring
+    them into repro.kernels.quant must not fork the math."""
+    from repro.parallel import compression
+    assert compression.quantize_int8 is quantize_int8
+    assert compression.dequantize is dequantize
+
+
+# ------------------------------------------------------------ hypothesis ----
+
+if HAVE_HYPOTHESIS:
+    finite = st.floats(min_value=-1e6, max_value=1e6, width=32,
+                       allow_nan=False, allow_infinity=False)
+    tiny = st.floats(min_value=-1e-12, max_value=1e-12, width=32,
+                     allow_nan=False, allow_infinity=False)
+
+    @given(rows=st.lists(
+        st.lists(st.one_of(finite, tiny, st.just(0.0)),
+                 min_size=1, max_size=16),
+        min_size=1, max_size=8).filter(
+            lambda r: len({len(row) for row in r}) == 1))
+    @settings(max_examples=200, deadline=None)
+    def test_quantize_kv_error_bound_property(rows):
+        """For any finite fp32 page — including all-zero, denormal, and
+        mixed-magnitude rows — |dequant(quant(x)) - x| <= absmax(row)/254
+        (with the 1e-12 absmax floor), elementwise."""
+        x = np.asarray(rows, np.float32)
+        q, s = quantize_kv(jnp.asarray(x))
+        y = np.asarray(dequantize_kv(q, s))
+        assert np.isfinite(y).all()
+        assert (np.abs(y - x) <= _row_bound(x)).all()
+        zero_rows = (x == 0).all(axis=-1)
+        assert (y[zero_rows] == 0).all()
+else:                                       # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev)")
+    def test_quantize_kv_error_bound_property():
+        ...

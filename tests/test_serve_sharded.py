@@ -146,6 +146,51 @@ print('OK sharded engine parity (pallas)')
 """)
 
 
+def test_sharded_int8_quantized_parity(subproc):
+    """Int8 KV pages under the kv_pages mesh: the scale arrays must shard
+    with their pools (P/n pages of scales per chip), quantization happens
+    inside the shard_map body, and the 2/4-way int8 engines — gather and
+    pallas-interpret — emit bitwise the single-device *fp32* engine's
+    greedy streams."""
+    subproc(HEADER + """
+rng = np.random.default_rng(37)
+reqs = [(i, rng.integers(0, cfg.vocab_size,
+                         int(rng.integers(2, 9))).astype(np.int32),
+         int(rng.integers(2, 6))) for i in range(8)]
+
+def run(mesh=None, impl='gather', kv_dtype='native'):
+    eng = ServeEngine(lm, params, max_batch=4, max_seq=32,
+                      cache_backend='paged', page_size=4, num_pages=16,
+                      decode_impl=impl, mesh=mesh, kv_dtype=kv_dtype)
+    for i, p, n in reqs:
+        eng.submit(Request(i, p, max_new_tokens=n))
+    out = {r.id: r.out_tokens for r in eng.run_until_drained()}
+    return out, eng
+
+base, _ = run()
+assert len(base) == 8
+for n in (2, 4):
+    mesh = make_mesh((n,), ('model',))
+    for impl in ('gather', 'pallas'):
+        out, eng = run(mesh, impl, 'int8')
+        assert out == base, f'int8 stream divergence n={n} impl={impl}'
+        st = eng.kv.memory_stats()
+        assert st.kv_dtype == 'int8' and st.mesh_chips == n
+        assert st.bytes_per_chip == st.bytes_total // n
+        layers = eng.kv.state['layers']
+        assert layers['k'].dtype == jnp.int8
+        # scale arrays shard P/n with their pools: each chip holds only
+        # its page range's scales
+        for name in ('k_scale', 'v_scale'):
+            arr = layers[name]
+            shards = arr.addressable_shards
+            assert len(shards) == n, name
+            assert shards[0].data.shape[1] == arr.shape[1] // n, name
+        print(f'OK int8 streams n={n} impl={impl}')
+print('OK sharded int8 parity')
+""")
+
+
 def test_prefix_shared_pages_span_chips(subproc):
     """Prefix sharing across the chip boundary: with per-chip capacity
     smaller than one request's footprint, a slot's pages (and the shared
