@@ -7,8 +7,8 @@
 PY ?= python
 
 .PHONY: test test-multidevice test-all smoke bench bench-serve \
-	bench-decode bench-sharded bench-chunked bench-quant docs-check \
-	dev-deps
+	bench-decode bench-sharded bench-chunked bench-quant bench-tenant \
+	docs-check dev-deps
 
 # tier-1: the fast single-process suite.  The multi-device subprocess
 # files are split into `test-multidevice` (their own CI job) so this —
@@ -73,6 +73,16 @@ bench-chunked:
 bench-quant:
 	PYTHONPATH=src:. $(PY) -c "from benchmarks import bench_serving; \
 	[print(f'{n},{u:.1f},{d}') for n, u, d in bench_serving.run_quant()]"
+
+# multi-tenant SLO soak: bursty interactive chat over a saturating batch
+# backlog, scheduled (priority + quota + preemption) vs fifo vs solo —
+# asserts interactive p99 TTFT within 2x of solo under the scheduler while
+# fifo degrades >= 5x, zero quota violations, and bitwise parity of every
+# non-preempted stream; JSON lands in benchmarks/out/tenant_slo.json and
+# one trajectory entry is appended to the committed BENCH_serving.json
+bench-tenant:
+	PYTHONPATH=src:. $(PY) -c "from benchmarks import bench_serving; \
+	[print(f'{n},{u:.1f},{d}') for n, u, d in bench_serving.run_tenant()]"
 
 # documentation gate: every relative link in tracked *.md files must
 # resolve, and docs/telemetry.md must list exactly the metrics the engine

@@ -2,7 +2,14 @@
 layer over the gang scheduler — platform administrators provision quotas per
 project, researchers submit within them, and capacity can be moved between
 tenants (the paper's "resources are moved between clusters for training and
-inference services based on business needs")."""
+inference services based on business needs").
+
+The **priority-class registry** lives here because both resource layers
+share it: cluster-level namespaces (this module — nodes are the resource)
+and the serving-level SLO scheduler (``repro.serve.tenancy`` — KV pages are
+the resource) map the same class names onto the same relative priorities,
+so "interactive outranks batch" means one thing across the whole stack.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -10,6 +17,28 @@ from typing import Dict, List, Optional
 
 from repro.core.scheduler import GangScheduler, Job, JobState
 from repro.core.telemetry import MetricsRegistry
+
+
+@dataclass(frozen=True)
+class PriorityClass:
+    """One SLO class: a name, a strict priority (higher wins admission and
+    is never preempted by lower), whether members may be preempted under
+    resource pressure, and an optional per-iteration chunked-prefill token
+    budget (serving only; ``None`` = bounded only by the engine's global
+    budget)."""
+    name: str
+    priority: int
+    preemptible: bool = True
+    prefill_budget: Optional[int] = None
+
+
+#: TTFT-sensitive traffic: admitted first, never preempted.
+INTERACTIVE = PriorityClass("interactive", 100, preemptible=False)
+#: Throughput traffic: yields pages/slots to interactive under pressure.
+BATCH = PriorityClass("batch", 0, preemptible=True)
+
+DEFAULT_CLASSES: Dict[str, PriorityClass] = {
+    INTERACTIVE.name: INTERACTIVE, BATCH.name: BATCH}
 
 
 @dataclass

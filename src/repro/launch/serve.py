@@ -20,6 +20,11 @@ contiguous dense rows via ``--cache-backend contiguous``.
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         python -m repro.launch.serve --mesh 4   # sharded paged serving:
         # pools pinned P/4 pages per chip, partial-softmax merged reads
+    python -m repro.launch.serve \
+        --tenants chat=interactive,bulk=batch --quota bulk=24 \
+        # multi-tenant SLO serving: priority-ordered admission, per-tenant
+        # page quotas in the banker check, preemptive page eviction —
+        # interactive traffic admits ahead of (and can preempt) batch
 """
 from __future__ import annotations
 
@@ -99,6 +104,28 @@ def main():
                     help="mesh axis name the kv_pages dim maps onto "
                          "(default: model, matching the kv_pages sharding "
                          "rule in repro.parallel.sharding)")
+    ap.add_argument("--tenants", default="", metavar="N=CLS,...",
+                    help="multi-tenant SLO serving: comma-separated "
+                         "name=class tenant table (classes: interactive — "
+                         "admitted first, never preempted — and batch; "
+                         "class defaults to batch when omitted).  Requests "
+                         "round-robin over the tenants.  Empty = "
+                         "single-tenant FIFO engine")
+    ap.add_argument("--quota", default="", metavar="N=PAGES,...",
+                    help="per-tenant KV page quotas (name=pages,...): a "
+                         "tenant at cap has its admissions quota-denied — "
+                         "skipped, not queue-blocking — until its slots "
+                         "free pages.  Requires --tenants and the paged "
+                         "backend")
+    ap.add_argument("--priority", dest="priority", action="store_true",
+                    default=True,
+                    help="preempt lowest-priority running decodes when a "
+                         "higher class cannot admit (pages evicted, request "
+                         "re-queued for recompute-on-resume prefill; "
+                         "default on)")
+    ap.add_argument("--no-priority", dest="priority", action="store_false",
+                    help="disable preemption: quotas and priority-ordered "
+                         "admission only")
     args = ap.parse_args()
 
     import dataclasses
@@ -111,6 +138,13 @@ def main():
     if args.mesh:
         from repro.parallel.mesh import make_mesh
         mesh = make_mesh((args.mesh,), (args.mesh_axis,))
+    tenancy = None
+    if args.tenants:
+        from repro.serve import TenancyConfig
+        tenancy = TenancyConfig.parse(args.tenants, args.quota,
+                                      preemption=args.priority)
+    elif args.quota:
+        raise SystemExit("--quota requires --tenants")
     eng = ServeEngine(lm, params, args.max_batch, args.max_seq,
                       cache_backend=args.cache_backend,
                       page_size=args.page_size, num_pages=args.num_pages,
@@ -119,14 +153,17 @@ def main():
                       kv_axis=args.mesh_axis,
                       prefill_chunk=args.prefill_chunk,
                       prefill_budget=args.prefill_budget,
-                      kv_dtype=args.kv_dtype)
+                      kv_dtype=args.kv_dtype, tenancy=tenancy)
 
+    tenant_names = sorted(tenancy.tenants) if tenancy else []
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size,
                               rng.integers(4, 12)).astype(np.int32)
         eng.submit(Request(i, prompt, max_new_tokens=args.new_tokens,
+                           tenant=(tenant_names[i % len(tenant_names)]
+                                   if tenant_names else "default"),
                            sampling=SamplingParams(
                                temperature=args.temperature,
                                top_k=args.top_k, top_p=args.top_p, seed=i)))
@@ -173,6 +210,25 @@ def main():
         print(f"chunked prefill [{args.prefill_chunk} tok/chunk, budget "
               f"{eng.budget}]: {chunks:.0f} chunks, {stalls:.0f} page-grant "
               f"stalls, decode stall iters={stall_it:.0f}")
+    if tenancy is not None:
+        preempt = eng.reg.counter("serve_preemptions_total").get()
+        qdeny = eng.reg.counter("serve_quota_denied_total").get()
+        print(f"tenancy [{len(tenancy.tenants)} tenants, preemption "
+              f"{'on' if tenancy.preemption else 'off'}]: "
+              f"{preempt:.0f} preemptions, {qdeny:.0f} quota denies")
+        for name in tenant_names:
+            spec = tenancy.spec(name)
+            peak = eng.reg.gauge("serve_tenant_pages_in_use").get(
+                {"tenant": name})
+            quota = (f"/{spec.page_quota}" if spec.page_quota is not None
+                     else "")
+            print(f"  tenant {name} [{spec.cls}]: pages {peak:.0f}{quota}")
+        for cls in sorted({t.cls for t in tenancy.tenants.values()}):
+            h = eng.reg.histogram("serve_class_ttft_seconds")
+            if h.count({"class": cls}):
+                print(f"  class {cls}: TTFT p50 "
+                      f"{h.quantile(0.5, {'class': cls})*1e3:.0f}ms p99 "
+                      f"{h.quantile(0.99, {'class': cls})*1e3:.0f}ms")
 
 
 if __name__ == "__main__":

@@ -5,8 +5,13 @@ from repro.serve.kvcache import (ContiguousCache, KVCache, MemoryStats,
                                  decode_transient_bytes, make_cache,
                                  page_kv_bytes)
 from repro.serve.sampling import filtered_probs, sample_batch
+from repro.serve.tenancy import (BATCH, INTERACTIVE, PriorityClass,
+                                 TenancyConfig, TenantSpec, Victim,
+                                 next_victim)
 
 __all__ = ["Request", "SamplingParams", "ServeEngine", "sample_token",
            "filtered_probs", "sample_batch", "KVCache", "ContiguousCache",
            "PagedCache", "MemoryStats", "make_cache", "contiguous_kv_bytes",
-           "decode_transient_bytes", "page_kv_bytes"]
+           "decode_transient_bytes", "page_kv_bytes", "PriorityClass",
+           "INTERACTIVE", "BATCH", "TenantSpec", "TenancyConfig", "Victim",
+           "next_victim"]

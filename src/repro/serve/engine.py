@@ -54,6 +54,19 @@ regime of Figs 5/6/8.  Design:
   (the sharded pool's per-chip chunk scatter is a ROADMAP follow-on), and
   dense-FFN families only — MoE capacity routing depends on the forwarded
   group shape, so chunk-at-a-time routing would break stream parity.
+* **Multi-tenant SLO scheduling** (``tenancy=``, ``repro.serve.tenancy``):
+  requests carry a tenant id; each tenant has a priority class
+  (``interactive`` / ``batch``, extensible) and an optional KV **page
+  quota** the paged banker enforces (a quota deny skips just that request
+  — other tenants keep admitting — while a pool deny still stops
+  admission in order).  Admission is priority-ordered (stable FIFO within
+  a class), chunked prefill schedules TTFT-sensitive classes first with
+  optional per-class token budgets, and under slot/page pressure the
+  engine **preempts** the lowest-priority preemptible running decode:
+  its pages are evicted and the request re-queued for
+  recompute-on-resume prefill (prompt + generated-so-far tokens re-enter
+  as one prefill, re-sharing still-registered prefix pages, with the
+  sampling step index resumed so non-greedy streams stay reproducible).
 * **On-device sampling**: greedy / temperature / top-k / top-p run as a
   vectorized kernel (``repro.serve.sampling``) fused into the decode
   dispatch.  The only host transfer per iteration is the (B,) vector of
@@ -79,7 +92,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -88,6 +101,7 @@ import numpy as np
 from repro.models import ForwardOpts, LM
 from repro.core.telemetry import MetricsRegistry
 from repro.serve.sampling import sample_batch
+from repro.serve.tenancy import TenancyConfig, Victim, next_victim
 
 
 @dataclass
@@ -102,8 +116,11 @@ class SamplingParams:
 class _PrefillState:
     """A slot mid-chunked-prefill: resumable across engine iterations."""
     req: Request
-    done: int = 0            # prompt positions landed so far
+    done: int = 0            # prefill positions landed so far
     shared: int = 0          # leading positions backed by shared pages
+    # the token array being prefilled: the prompt, or — after a preemption
+    # — prompt + generated-so-far (recompute-on-resume)
+    tokens: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -118,6 +135,10 @@ class Request:
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
+    tenant: str = "default"          # tenancy key (ignored without tenancy=)
+    preemptions: int = 0             # times this request lost its slot
+    last_token_at: Optional[float] = None     # for inter-token latency
+    _seq: int = 0                    # submit order — the FIFO tiebreak
 
 
 def _filtered_probs_np(logits: np.ndarray, params: SamplingParams) -> np.ndarray:
@@ -163,7 +184,8 @@ class ServeEngine:
                  decode_impl: str = "gather",
                  mesh=None, kv_axis: str = "model",
                  prefill_chunk: int = 0, prefill_budget: int = 0,
-                 kv_dtype: str = "native"):
+                 kv_dtype: str = "native",
+                 tenancy: Optional[TenancyConfig] = None):
         # per-slot positions rely on masked-then-overwritten cache writes,
         # which holds for attention KV caches but not recurrent state
         assert lm.cfg.family in ("dense", "moe", "vlm"), (
@@ -222,6 +244,35 @@ class ServeEngine:
                 raise ValueError(
                     f"prefill budget {self.budget} below one chunk "
                     f"({self.chunk}): no chunk could ever dispatch")
+        # multi-tenant SLO scheduling: priority-ordered admission, per-tenant
+        # page quotas (enforced by the paged banker), preemptive eviction
+        self.tenancy = tenancy
+        self._submit_seq = 0
+        if tenancy is not None:
+            if tenancy.has_quotas():
+                if type(self.kv).backend != "paged":
+                    raise ValueError(
+                        "per-tenant page quotas are enforced inside the "
+                        "paged backend's banker-style safety check; the "
+                        "contiguous layout has no pages to meter (use "
+                        "cache_backend='paged' or drop the quotas)")
+                for spec in tenancy.tenants.values():
+                    if spec.page_quota is not None:
+                        self.kv.set_quota(spec.name, spec.page_quota)
+            if tenancy.preemption and type(self.kv).backend != "paged":
+                raise ValueError(
+                    "preemption evicts a victim's KV pages back to the "
+                    "pool; the contiguous layout pre-reserves every slot so "
+                    "there is nothing to reclaim (use cache_backend='paged' "
+                    "or TenancyConfig(..., preemption=False))")
+            if self.chunk:
+                for spec in tenancy.tenants.values():
+                    cap = tenancy.classes[spec.cls].prefill_budget
+                    if cap is not None and cap < self.chunk:
+                        raise ValueError(
+                            f"class {spec.cls!r} prefill_budget {cap} below "
+                            f"one chunk ({self.chunk}): its tenants could "
+                            "never finish a prefill")
         self.prefilling: dict = {}           # slot -> _PrefillState (FIFO)
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int32)   # next write index
@@ -246,6 +297,11 @@ class ServeEngine:
             self._chunk_step = jax.jit(self._make_chunk(),
                                        donate_argnums=(2,))
         self._declare_metrics()
+        if tenancy is not None:
+            for spec in tenancy.tenants.values():
+                if spec.page_quota is not None:
+                    self.reg.gauge("serve_tenant_quota_pages").set(
+                        spec.page_quota, {"tenant": spec.name})
 
     def _declare_metrics(self):
         """Eagerly register every metric the engine can emit, with help
@@ -256,7 +312,15 @@ class ServeEngine:
         c, g, h = self.reg.counter, self.reg.gauge, self.reg.histogram
         c("serve_requests_total", "requests accepted by submit()")
         c("serve_admission_deferred_total",
-          "admissions deferred by page-pool admission control")
+          "admissions deferred by page-pool admission control; the "
+          "'reason' label splits pool_exhausted vs quota_denied (the "
+          "unlabeled series counts both)")
+        c("serve_quota_denied_total",
+          "admissions denied by a per-tenant page quota (the tenant's "
+          "request is skipped; lower-priority tenants still admit)")
+        c("serve_preemptions_total",
+          "running decodes preempted under pressure: pages evicted, "
+          "request re-queued for recompute-on-resume prefill")
         c("serve_prefill_dispatches_total",
           "prefill device dispatches (bucketed groups + chunks)")
         c("serve_prefill_tokens_total", "prompt tokens prefilled")
@@ -271,6 +335,13 @@ class ServeEngine:
         c("serve_tokens_total", "tokens emitted by finished requests")
         h("serve_ttft_seconds", "submit-to-first-token latency")
         h("serve_latency_seconds", "submit-to-completion latency")
+        h("serve_class_ttft_seconds",
+          "submit-to-first-token latency by priority class ('class' label; "
+          "populated when tenancy is configured)")
+        h("serve_class_itl_seconds",
+          "inter-token latency by priority class ('class' label; a "
+          "preempted stream's requeue gap counts — that is the SLO cost "
+          "of preemption)")
         h("serve_prefill_batch_size",
           "requests covered by one bucketed prefill dispatch",
           buckets=(1, 2, 4, 8, 16, 32, 64, float("inf")))
@@ -286,6 +357,10 @@ class ServeEngine:
           "HBM pinned by the int8 page format's fp32 scale arrays")
         g("serve_kv_quant_bytes_saved",
           "pool bytes saved by int8 pages vs the compute-dtype pool")
+        g("serve_tenant_pages_in_use",
+          "footprint pages charged to each tenant ('tenant' label)")
+        g("serve_tenant_quota_pages",
+          "configured per-tenant page quota ('tenant' label)")
 
     # ---------------------------------------------------------- jit builds ----
     def _make_fused(self):
@@ -323,13 +398,19 @@ class ServeEngine:
         admitted slot's storage (rows for contiguous, page-table-resolved
         flat indices for paged), and sample each request's first token on
         device — all in one dispatch.  jit caches one trace per
-        (group size, prompt bucket) pair."""
+        (group size, prompt bucket) pair.
+
+        ``steps`` is each request's per-stream sampling index: 0 for a
+        fresh prompt, ``len(out_tokens)`` for a preempted request being
+        recompute-resumed — the token it re-samples is that deep in its
+        stream, so a seeded non-greedy stream draws the same value it
+        would have drawn without the preemption."""
         lm, opts, vocab = self.lm, self.opts, self.lm.cfg.vocab_size
         has_img = self.img_len > 0
         writer = self.kv.staged_write_prefill
 
         def run(params, tokens, img_embeds, layers, write_spec, last_idx,
-                temps, top_ks, top_ps, seeds):
+                temps, top_ks, top_ps, seeds, steps):
             batch = {"tokens": tokens}
             if has_img:
                 batch["img_embeds"] = img_embeds
@@ -338,8 +419,7 @@ class ServeEngine:
             layers = writer(layers, pcache["layers"], write_spec)
             n = tokens.shape[0]
             rows = logits[jnp.arange(n), last_idx, :vocab].astype(jnp.float32)
-            toks = sample_batch(rows, temps, top_ks, top_ps, seeds,
-                                jnp.zeros((n,), jnp.int32))
+            toks = sample_batch(rows, temps, top_ks, top_ps, seeds, steps)
             return toks, layers
 
         return run
@@ -355,13 +435,12 @@ class ServeEngine:
         lm, vocab = self.lm, self.lm.cfg.vocab_size
 
         def run(params, tokens, layers, page_row, dest, start_pos, last_pos,
-                temps, top_ks, top_ps, seeds):
+                temps, top_ks, top_ps, seeds, steps):
             cache = {"layers": layers, "page_table": page_row}
             logits, cache = lm.prefill_chunk(params, tokens, cache,
                                              start_pos, dest, last_pos)
             rows = logits[:, -1, :vocab].astype(jnp.float32)
-            toks = sample_batch(rows, temps, top_ks, top_ps, seeds,
-                                jnp.zeros((tokens.shape[0],), jnp.int32))
+            toks = sample_batch(rows, temps, top_ks, top_ps, seeds, steps)
             return toks, cache["layers"]
 
         return run
@@ -381,12 +460,90 @@ class ServeEngine:
                 f"request {req.id}: footprint of {self._footprint(req)} "
                 f"positions can never fit the {type(self.kv).backend} cache "
                 "pool (shrink the prompt/max_new_tokens or grow num_pages)")
+        if self.tenancy is not None:
+            self.tenancy.spec(req.tenant)    # raises on unknown tenant
         req.submitted_at = time.perf_counter()
+        req._seq = self._submit_seq
+        self._submit_seq += 1
         self.queue.append(req)
         self.reg.counter("serve_requests_total").inc()
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    # ----------------------------------------------------------- tenancy ----
+    def _prio(self, req: Request) -> int:
+        return self.tenancy.priority_of(req.tenant) if self.tenancy else 0
+
+    def _class_name(self, req: Request) -> str:
+        return self.tenancy.spec(req.tenant).cls if self.tenancy else "none"
+
+    def _tenant(self, req: Request) -> Optional[str]:
+        return req.tenant if self.tenancy is not None else None
+
+    def _admission_order(self) -> List[Request]:
+        """Queue snapshot in admission order: priority class first, then
+        submit order.  Without tenancy the sort is a no-op (all priority 0,
+        stable by ``_seq``) — plain FIFO, bit-identical to the untenanted
+        engine.  A request preempted *during* the current admission pass
+        re-enters ``self.queue`` but not this snapshot, so one pass can
+        never preempt-and-readmit the same request."""
+        return sorted(self.queue, key=lambda r: (-self._prio(r), r._seq))
+
+    def _prefill_tokens(self, req: Request) -> np.ndarray:
+        """What prefill must land for this request: the prompt — plus, for
+        a preempted request, every token it had already generated
+        (recompute-on-resume: the whole history re-enters as one prefill,
+        re-sharing any of its pages still in the prefix registry)."""
+        if req.out_tokens:
+            return np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.out_tokens, np.int32)])
+        return np.asarray(req.prompt, np.int32)
+
+    def _count_deferral(self, reason: str) -> None:
+        c = self.reg.counter("serve_admission_deferred_total")
+        c.inc()                       # unlabeled total (both causes)
+        c.inc(1, {"reason": reason})
+        if reason == "quota_denied":
+            self.reg.counter("serve_quota_denied_total").inc()
+
+    def _preempt_for(self, req: Request) -> Optional[int]:
+        """Evict the best victim so ``req`` can take its slot/pages.
+
+        Victims are running decode slots only — strictly lower priority,
+        preemptible class; mid-chunked-prefill slots are excluded (their
+        banker need is in flight).  Returns the freed slot, or ``None``
+        when nothing is eligible (equal priority never preempts: two batch
+        tenants cannot livelock evicting each other)."""
+        if (self.tenancy is None or not self.tenancy.preemption
+                or type(self.kv).backend != "paged"):
+            return None
+        cands = [Victim(i, self._prio(r),
+                        self.tenancy.class_of(r.tenant).preemptible,
+                        self.kv.slot_freeable(i))
+                 for i, r in enumerate(self.slot_req)
+                 if r is not None and i not in self.prefilling]
+        victim = next_victim(cands, self._prio(req))
+        if victim is None:
+            return None
+        self._preempt(victim.slot)
+        return victim.slot
+
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot``'s pages and re-queue its request.  The pending
+        (sampled, not yet emitted) token is discarded — the resume prefill
+        re-samples it at the same stream step, so a greedy or seeded
+        stream continues bit-identically."""
+        req = self.slot_req[slot]
+        self.kv.evict(slot)
+        self.slot_req[slot] = None
+        self.active[slot] = False
+        self.slot_pos[slot] = 0
+        self.next_token[slot] = 0
+        req.preemptions += 1
+        self.queue.append(req)   # keeps _seq: resumes ahead of later peers
+        self.reg.counter("serve_preemptions_total").inc()
 
     def _footprint(self, req: Request) -> int:
         """Cache positions a request can ever occupy — the number ``submit``
@@ -404,90 +561,153 @@ class ServeEngine:
         bucket, each covering every same-bucket request admitted this
         iteration.
 
-        Admission is FIFO: the head request reserves its full cache
-        footprint (prompt + max_new_tokens) via ``kv.alloc`` before its slot
-        is committed; if the page pool cannot cover it, admission stops (no
-        head-of-line skipping) and the request waits for running slots to
-        finish and free pages."""
+        Admission is FIFO within a priority class (priority-ordered across
+        classes under tenancy): a request reserves its full cache footprint
+        (prompt + max_new_tokens) via ``kv.alloc`` before its slot is
+        committed.  A **pool** deny stops admission in order (no
+        head-of-line skipping inside a class) — after preemption, if
+        enabled, has run out of lower-priority victims to evict.  A
+        **quota** deny skips just that request: its tenant is at cap, but
+        other tenants' requests behind it must still admit."""
         if self.chunk:
             self._admit_chunked()
             return
         free = self._free_slots()
-        admitted = []                 # (slot, req, bucket, shared_len)
-        while free and self.queue:
-            req = self.queue[0]
-            plen = len(req.prompt)
+        admitted = []                 # (slot, req, bucket, shared_len, toks)
+        stop = False
+        for req in self._admission_order():
+            if stop:
+                break
+            toks = self._prefill_tokens(req)
             # image positions are embeddings, not tokens — no hash identity,
             # so VLM requests skip prefix sharing
-            prefix = req.prompt if self.img_len == 0 else None
-            shared = self.kv.alloc(free[0], self._footprint(req),
-                                   prefix=prefix)
-            if shared is None:
-                self.reg.counter("serve_admission_deferred_total").inc()
-                break
-            slot = free.pop(0)
-            self.queue.pop(0)
-            bucket = 1 << (plen - 1).bit_length()      # next power of two
-            bucket = min(bucket, self.S - self.img_len)
-            admitted.append((slot, req, bucket, shared))
+            prefix = toks if self.img_len == 0 else None
+            while True:
+                if not free:
+                    slot = self._preempt_for(req)
+                    if slot is None:
+                        self._count_deferral("pool_exhausted")
+                        stop = True
+                        break
+                    free.append(slot)
+                shared = self.kv.alloc(free[0], self._footprint(req),
+                                       prefix=prefix,
+                                       tenant=self._tenant(req))
+                if shared is not None:
+                    slot = free.pop(0)
+                    self.queue.remove(req)
+                    plen = len(toks)
+                    bucket = 1 << (plen - 1).bit_length()  # next power of two
+                    bucket = min(bucket, self.S - self.img_len)
+                    admitted.append((slot, req, bucket, shared, toks))
+                    break
+                if getattr(self.kv, "last_deny", None) == "quota":
+                    self._count_deferral("quota_denied")
+                    break             # skip this request, keep admitting
+                slot = self._preempt_for(req)
+                if slot is None:
+                    self._count_deferral("pool_exhausted")
+                    stop = True
+                    break
+                free.append(slot)
         # group same-bucket admissions into single forward dispatches
-        for bucket in sorted({b for _, _, b, _ in admitted}):
+        for bucket in sorted({b for _, _, b, _, _ in admitted}):
             self._prefill_group(
                 bucket, [a for a in admitted if a[2] == bucket])
         if admitted:
             self._export_memory()
 
     def _admit_chunked(self):
-        """Chunked admission (FIFO, no head-of-line skipping): the head
-        request claims only its first chunk's pages (``kv.alloc_chunked`` —
-        banker-safe incremental allocation), takes a slot with the decode
-        shield up, and joins ``self.prefilling``; its chunks dispatch from
-        ``_run_prefill_chunks`` starting this same iteration.  A request
-        whose first-chunk grant is not safe yet defers exactly like
-        whole-prompt admission control."""
+        """Chunked admission (priority-ordered under tenancy, FIFO within a
+        class): an admitted request claims only its first chunk's pages
+        (``kv.alloc_chunked`` — banker-safe incremental allocation, full
+        footprint charged against its tenant's quota up front so later
+        ``extend``s never quota-stall), takes a slot with the decode shield
+        up, and joins ``self.prefilling``; its chunks dispatch from
+        ``_run_prefill_chunks`` starting this same iteration.  Deny
+        handling mirrors whole-prompt ``_admit``: pool denies preempt then
+        stop, quota denies skip just the capped tenant's request."""
         free = self._free_slots()
         admitted = False
-        while free and self.queue:
-            req = self.queue[0]
-            first = min(self.chunk, len(req.prompt))
-            shared = self.kv.alloc_chunked(free[0], self._footprint(req),
-                                           first, prefix=req.prompt)
-            if shared is None:
-                self.reg.counter("serve_admission_deferred_total").inc()
+        stop = False
+        for req in self._admission_order():
+            if stop:
                 break
-            slot = free.pop(0)
-            self.queue.pop(0)
-            self.slot_req[slot] = req
-            self.active[slot] = False            # not decodable yet
-            self.kv.set_decode_shield(slot, True)
-            self.prefilling[slot] = _PrefillState(req=req, shared=shared)
-            admitted = True
+            toks = self._prefill_tokens(req)
+            first = min(self.chunk, len(toks))
+            while True:
+                if not free:
+                    slot = self._preempt_for(req)
+                    if slot is None:
+                        self._count_deferral("pool_exhausted")
+                        stop = True
+                        break
+                    free.append(slot)
+                shared = self.kv.alloc_chunked(free[0], self._footprint(req),
+                                               first, prefix=toks,
+                                               tenant=self._tenant(req))
+                if shared is not None:
+                    slot = free.pop(0)
+                    self.queue.remove(req)
+                    self.slot_req[slot] = req
+                    self.active[slot] = False    # not decodable yet
+                    self.kv.set_decode_shield(slot, True)
+                    self.prefilling[slot] = _PrefillState(
+                        req=req, shared=shared, tokens=toks)
+                    admitted = True
+                    break
+                if getattr(self.kv, "last_deny", None) == "quota":
+                    self._count_deferral("quota_denied")
+                    break
+                slot = self._preempt_for(req)
+                if slot is None:
+                    self._count_deferral("pool_exhausted")
+                    stop = True
+                    break
+                free.append(slot)
         if admitted:
             self._export_memory()
 
-    def _run_prefill_chunks(self, budget: int, skip=()):
-        """Dispatch up to ``budget`` tokens of prefill chunks, oldest
-        admission first (dict order = admission order).  Each chunk first
-        ``extend``s the slot's pages to cover its end — the *final* chunk
-        extends to the full footprint, claiming the decode tail — and a
-        chunk whose grant is not banker-safe stalls (the slot resumes in a
-        later iteration once completions free pages; later admissions may
-        keep chunking meanwhile).  When a slot's last chunk lands it is
-        unshielded, marked active with the sampled first token pending, and
-        decodes in this same iteration's fused dispatch.  Returns (budget
-        tokens consumed, slots that stalled) — ``skip`` lets the second
-        same-iteration pass avoid re-stalling slots the first already
-        counted."""
+    def _run_prefill_chunks(self, budget: int, skip=(), cls_spent=None):
+        """Dispatch up to ``budget`` tokens of prefill chunks — admission
+        order without tenancy (dict order); with tenancy, TTFT-sensitive
+        classes chunk first (priority order, ``_seq`` tiebreak) and a
+        class's per-iteration token cap (``PriorityClass.prefill_budget``,
+        tracked across both same-iteration passes via ``cls_spent``) stops
+        batch-class prompts from monopolizing the global budget.  Each
+        chunk first ``extend``s the slot's pages to cover its end — the
+        *final* chunk extends to the full footprint, claiming the decode
+        tail — and a chunk whose grant is not banker-safe stalls (the slot
+        resumes in a later iteration once completions free pages; later
+        admissions may keep chunking meanwhile).  When a slot's last chunk
+        lands it is unshielded, marked active with the sampled first token
+        pending, and decodes in this same iteration's fused dispatch.
+        Returns (budget tokens consumed, slots that stalled) — ``skip``
+        lets the second same-iteration pass avoid re-stalling slots the
+        first already counted."""
         landed = spent = 0
         stalled: set = set()
+        cls_spent: Dict[str, int] = \
+            cls_spent if cls_spent is not None else {}
         if not self.prefilling:
             return spent, stalled
-        for slot in list(self.prefilling):
+        order = list(self.prefilling)
+        if self.tenancy is not None:
+            order.sort(key=lambda s: (-self._prio(self.prefilling[s].req),
+                                      self.prefilling[s].req._seq))
+        for slot in order:
             if slot in skip:
                 continue
             st = self.prefilling[slot]
-            req, plen = st.req, len(st.req.prompt)
-            while budget >= self.chunk and st.done < plen:
+            req = st.req
+            ptoks = st.tokens if st.tokens is not None else req.prompt
+            plen = len(ptoks)
+            cname = self._class_name(req)
+            cap = (self.tenancy.classes[cname].prefill_budget
+                   if self.tenancy is not None else None)
+            while (budget >= self.chunk and st.done < plen
+                   and (cap is None
+                        or cls_spent.get(cname, 0) + self.chunk <= cap)):
                 end = min(st.done + self.chunk, plen)
                 final = end == plen
                 cover = self._footprint(req) if final else end
@@ -497,7 +717,7 @@ class ServeEngine:
                     stalled.add(slot)
                     break                    # defer-and-resume, not deadlock
                 tokens = np.zeros((1, self.chunk), np.int32)
-                tokens[0, :end - st.done] = req.prompt[st.done:end]
+                tokens[0, :end - st.done] = ptoks[st.done:end]
                 dest = self.kv.chunk_dest(slot, st.done, end, self.chunk,
                                           st.shared)
                 sp = req.sampling
@@ -511,21 +731,23 @@ class ServeEngine:
                     jnp.asarray([sp.temperature], jnp.float32),
                     jnp.asarray([sp.top_k], jnp.int32),
                     jnp.asarray([sp.top_p], jnp.float32),
-                    jnp.asarray([sp.seed], jnp.int32))
+                    jnp.asarray([sp.seed], jnp.int32),
+                    jnp.asarray([len(req.out_tokens)], jnp.int32))
                 self.kv.update({**self.kv.state, "layers": new_layers})
-                self.kv.register_landed(slot, req.prompt, end)
+                self.kv.register_landed(slot, ptoks, end)
                 self.reg.counter("serve_prefill_chunks_total").inc()
                 self.reg.counter("serve_prefill_dispatches_total").inc()
                 self.reg.counter("serve_prefill_tokens_total").inc(
                     end - st.done)
                 budget -= self.chunk
                 spent += self.chunk
+                cls_spent[cname] = cls_spent.get(cname, 0) + self.chunk
                 landed += end - st.done
                 st.done = end
                 if final:
                     del self.prefilling[slot]
                     self.kv.set_decode_shield(slot, False)
-                    self.slot_pos[slot] = plen
+                    self.slot_pos[slot] = self.img_len + plen
                     self.next_token[slot] = int(np.asarray(toks)[0])
                     self.active[slot] = True
                     self.temps[slot] = sp.temperature
@@ -540,8 +762,10 @@ class ServeEngine:
 
     def _prefill_group(self, bucket: int, group):
         """One ``lm.forward`` dispatch for every admitted request in this
-        prompt bucket: stacked (n, bucket) tokens in, per-request first
-        tokens and the updated K/V storage out."""
+        prefill bucket: stacked (n, bucket) tokens in, per-request first
+        tokens and the updated K/V storage out.  A recompute-resumed
+        request's token array is prompt + generated-so-far; its first
+        token re-samples at stream step ``len(out_tokens)``."""
         n = len(group)
         paged = type(self.kv).backend == "paged"
         tokens = np.zeros((n, bucket), np.int32)
@@ -550,18 +774,20 @@ class ServeEngine:
         top_ks = np.zeros(n, np.int32)
         top_ps = np.ones(n, np.float32)
         seeds = np.zeros(n, np.int32)
+        steps = np.zeros(n, np.int32)
         imgs = np.zeros((n, self.img_len, self.lm.cfg.d_model), np.float32) \
             if self.img_len else None
         block_len = self.img_len + bucket
         write_spec = (np.zeros((n, block_len), np.int32) if paged
                       else np.zeros(n, np.int32))
-        for j, (slot, req, _, shared) in enumerate(group):
-            plen = len(req.prompt)
-            tokens[j, :plen] = req.prompt
+        for j, (slot, req, _, shared, ptoks) in enumerate(group):
+            plen = len(ptoks)
+            tokens[j, :plen] = ptoks
             last_idx[j] = self.img_len + plen - 1
             sp = req.sampling
             temps[j], top_ks[j] = sp.temperature, sp.top_k
             top_ps[j], seeds[j] = sp.top_p, sp.seed
+            steps[j] = len(req.out_tokens)
             if self.img_len and req.img_embeds is not None:
                 imgs[j] = req.img_embeds
             if paged:
@@ -575,21 +801,20 @@ class ServeEngine:
             self.params, jnp.asarray(tokens), img, self.kv.state["layers"],
             jnp.asarray(write_spec), jnp.asarray(last_idx),
             jnp.asarray(temps), jnp.asarray(top_ks), jnp.asarray(top_ps),
-            jnp.asarray(seeds))
+            jnp.asarray(seeds), jnp.asarray(steps))
         self.kv.update({**self.kv.state, "layers": new_layers})
         toks = np.asarray(toks)
-        for j, (slot, req, _, _) in enumerate(group):
+        for j, (slot, req, _, _, ptoks) in enumerate(group):
             sp = req.sampling
             self.slot_req[slot] = req
-            self.slot_pos[slot] = self.img_len + len(req.prompt)
+            self.slot_pos[slot] = self.img_len + len(ptoks)
             self.next_token[slot] = int(toks[j])
             self.active[slot] = True
             self.temps[slot] = sp.temperature
             self.top_ks[slot] = sp.top_k
             self.top_ps[slot] = sp.top_p
             self.seeds[slot] = sp.seed
-            self.reg.counter("serve_prefill_tokens_total").inc(
-                len(req.prompt))
+            self.reg.counter("serve_prefill_tokens_total").inc(len(ptoks))
         self.reg.counter("serve_prefill_dispatches_total").inc()
         # buckets fixed by the eager _declare_metrics registration
         self.reg.histogram("serve_prefill_batch_size").observe(n)
@@ -612,13 +837,17 @@ class ServeEngine:
             # a stalled slot gets first claim on pages freed since last
             # iteration, so sustained short-request traffic can slow a
             # mid-prefill long prompt but never starve it
-            spent, stalled = self._run_prefill_chunks(self.budget)
+            cls_spent: Dict[str, int] = {}
+            spent, stalled = self._run_prefill_chunks(self.budget,
+                                                      cls_spent=cls_spent)
             self._admit()
             if spent < self.budget:
                 # leftover budget covers a fresh admission's first chunk in
                 # the same iteration (skip already-stalled slots: the pages
-                # they need did not appear mid-iteration)
-                self._run_prefill_chunks(self.budget - spent, skip=stalled)
+                # they need did not appear mid-iteration; per-class caps
+                # carry over via cls_spent)
+                self._run_prefill_chunks(self.budget - spent, skip=stalled,
+                                         cls_spent=cls_spent)
         else:
             self._admit()
         pf_tokens = self.reg.counter("serve_prefill_tokens_total").get() - pf0
@@ -663,6 +892,14 @@ class ServeEngine:
                 req.first_token_at = now
                 self.reg.histogram("serve_ttft_seconds").observe(
                     now - req.submitted_at)
+                if self.tenancy is not None:
+                    self.reg.histogram("serve_class_ttft_seconds").observe(
+                        now - req.submitted_at,
+                        {"class": self._class_name(req)})
+            elif self.tenancy is not None and req.last_token_at is not None:
+                self.reg.histogram("serve_class_itl_seconds").observe(
+                    now - req.last_token_at, {"class": self._class_name(req)})
+            req.last_token_at = now
             self.slot_pos[i] += 1
             done = (len(req.out_tokens) >= req.max_new_tokens
                     or tok == req.eos_id
@@ -686,6 +923,10 @@ class ServeEngine:
 
     def _export_memory(self):
         st = self.kv.memory_stats()
+        if self.tenancy is not None:
+            for name in self.tenancy.tenants:
+                self.reg.gauge("serve_tenant_pages_in_use").set(
+                    st.tenant_pages.get(name, 0), {"tenant": name})
         self.reg.gauge("serve_kv_pages_in_use").set(st.pages_in_use)
         self.reg.gauge("serve_kv_bytes_reserved").set(st.bytes_reserved)
         self.reg.gauge("serve_kv_pages_shared").set(st.pages_shared)

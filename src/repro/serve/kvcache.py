@@ -47,7 +47,7 @@ numpy — it is O(pages) bookkeeping, never a device sync.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Protocol
 
 import jax
@@ -132,16 +132,21 @@ class MemoryStats:
     bytes_per_chip: int = 0   # pinned bytes each chip holds (= total / chips)
     kv_dtype: str = "native"  # page element format ("native" / "int8")
     bytes_scales: int = 0     # portion of bytes_total pinned by int8 scales
+    # footprint pages charged per tenant (multi-tenant serving; empty when
+    # requests carry no tenant tag)
+    tenant_pages: Dict[str, int] = field(default_factory=dict)
 
 
 class KVCache(Protocol):
     """The engine-facing cache protocol.
 
-    ``alloc(slot, length, prefix=None)`` reserves capacity for ``length``
-    token positions in ``slot``; returns the number of leading positions
-    already covered by shared physical storage (0 without sharing), or
-    ``None`` if the backend cannot admit the request now (admission
-    control).  ``write_prefill(slot, kv_block)`` lands a prompt's K/V block
+    ``alloc(slot, length, prefix=None, tenant=None)`` reserves capacity for
+    ``length`` token positions in ``slot``; returns the number of leading
+    positions already covered by shared physical storage (0 without
+    sharing), or ``None`` if the backend cannot admit the request now
+    (admission control) — ``last_deny`` then names the cause ("pool" vs
+    "quota") so the engine can defer pool pressure but *skip past* a
+    quota-capped tenant.  ``write_prefill(slot, kv_block)`` lands a prompt's K/V block
     in the slot's storage.  ``decode_view()`` is the device pytree handed to
     ``lm.decode_step``; ``update()`` stores the pytree a fused dispatch
     returned.  ``free(slot)`` releases the slot's storage.
@@ -165,9 +170,11 @@ class KVCache(Protocol):
     state: dict
     mesh: object
     kv_axis: str
+    last_deny: Optional[str]
 
     def alloc(self, slot: int, length: int,
-              prefix: Optional[np.ndarray] = None) -> Optional[int]: ...
+              prefix: Optional[np.ndarray] = None,
+              tenant: Optional[str] = None) -> Optional[int]: ...
     def write_prefill(self, slot: int, kv_block) -> None: ...
     def decode_view(self): ...
     def update(self, new_state) -> None: ...
@@ -194,6 +201,7 @@ class ContiguousCache:
     kv_axis = "model"
     kv_dtype = "native"         # int8 pages are a paged-format feature
     quantized = False
+    last_deny = None            # alloc never fails -> never a deny reason
 
     def __init__(self, lm, batch: int, max_seq: int, dtype=jnp.bfloat16):
         self.cfg = lm.cfg
@@ -208,7 +216,8 @@ class ContiguousCache:
         return length <= self.S
 
     def alloc(self, slot: int, length: int,
-              prefix: Optional[np.ndarray] = None) -> Optional[int]:
+              prefix: Optional[np.ndarray] = None,
+              tenant: Optional[str] = None) -> Optional[int]:
         assert not self._in_use[slot], f"slot {slot} already allocated"
         assert 0 < length <= self.S, (length, self.S)
         self._in_use[slot] = True
@@ -374,6 +383,19 @@ class PagedCache:
         # rows are hidden from the fused decode dispatch while they prefill
         self._slot_need: List[int] = [0] * batch
         self._shielded: set = set()
+        # multi-tenant accounting: a tenant's *full footprint* (every page
+        # the slot will ever hold, shared pages included, chunked tails
+        # included) is charged against its quota at admission time — so an
+        # in-flight chunked slot's ``extend`` can never hit a quota wall,
+        # and the banker's no-deadlock guarantee is untouched by quotas
+        self._quota: Dict[str, int] = {}
+        self._slot_tenant: List[Optional[str]] = [None] * batch
+        self._slot_charge: List[int] = [0] * batch
+        self._tenant_pages: Dict[str, int] = {}
+        #: why the last ``alloc``/``alloc_chunked`` returned ``None``:
+        #: "pool" (banker/exhaustion — engine defers, in-order) or "quota"
+        #: (tenant cap — engine skips this request and admits others)
+        self.last_deny: Optional[str] = None
 
     # ------------------------------------------------------------ sizing ----
     def pages_needed(self, length: int) -> int:
@@ -448,6 +470,48 @@ class PagedCache:
         items.append((remaining, take + extra_freeable))
         return self._safe(free - take, items)
 
+    # ------------------------------------------------------------ tenancy ----
+    def set_quota(self, tenant: str, pages: Optional[int]) -> None:
+        """Cap ``tenant``'s concurrently-charged footprint pages (``None``
+        lifts the cap).  Lowering a quota below current usage only blocks
+        *new* admissions — live slots run to completion."""
+        if pages is None:
+            self._quota.pop(tenant, None)
+        else:
+            assert pages >= 1, pages
+            self._quota[tenant] = pages
+
+    def tenant_pages(self, tenant: str) -> int:
+        return self._tenant_pages.get(tenant, 0)
+
+    def _quota_ok(self, tenant: Optional[str], n_total: int) -> bool:
+        if tenant is None or tenant not in self._quota:
+            return True
+        return self.tenant_pages(tenant) + n_total <= self._quota[tenant]
+
+    def _charge(self, slot: int, tenant: Optional[str], n_total: int) -> None:
+        if tenant is None:
+            return
+        self._slot_tenant[slot] = tenant
+        self._slot_charge[slot] = n_total
+        self._tenant_pages[tenant] = self.tenant_pages(tenant) + n_total
+
+    def slot_freeable(self, slot: int) -> int:
+        """Pages ``free(slot)``/``evict(slot)`` would return to the pool
+        right now (exclusively-owned only — shared prefix pages stay pinned
+        by their other references)."""
+        return sum(int(self._ref[p] == 1) for p in self._slot_pages[slot])
+
+    def evict(self, slot: int) -> int:
+        """Preempt ``slot``: release every page it holds (and its quota
+        charge) and return the number of pages that actually re-entered the
+        free pool.  The engine re-queues the request for recompute-on-resume
+        prefill — if its prompt pages are still registered (another sharer
+        or a not-yet-recycled page), the resume re-shares them."""
+        freed = self.slot_freeable(slot)
+        self.free(slot)
+        return freed
+
     def _match_shared(self, prefix: Optional[np.ndarray], n_pages: int):
         """Leading full prompt pages already registered (content landed) that
         this request can share.  Returns (shared page ids, full-page count)."""
@@ -465,12 +529,16 @@ class PagedCache:
         return shared, full
 
     def alloc(self, slot: int, length: int,
-              prefix: Optional[np.ndarray] = None) -> Optional[int]:
+              prefix: Optional[np.ndarray] = None,
+              tenant: Optional[str] = None) -> Optional[int]:
         """Reserve pages covering ``length`` positions for ``slot``.
 
         ``prefix``: the slot's prompt tokens starting at position 0 — the
         key for prefix sharing (pass ``None`` to disable for this request,
         e.g. VLM prompts whose leading positions are image embeddings).
+        ``tenant``: charge the footprint against this tenant's page quota
+        (``set_quota``); a quota deny sets ``last_deny = "quota"`` without
+        touching refcounts, distinguishable from a "pool" deny.
         Returns the number of leading positions backed by shared pages, or
         ``None`` when the free pool cannot cover the unshared remainder (or
         covering it would strand an in-flight chunked prefill — the banker's
@@ -480,6 +548,10 @@ class PagedCache:
         assert not self._slot_pages[slot], f"slot {slot} already allocated"
         assert 0 < length <= self.S, (length, self.S)
         n_pages = self.pages_needed(length)
+        self.last_deny = None
+        if not self._quota_ok(tenant, n_pages):
+            self.last_deny = "quota"
+            return None                      # tenant cap, not pool pressure
         shared, full = self._match_shared(prefix, n_pages)
         # bump shared refs before the safety check: a page going ref 1 -> 2
         # stops being freeable by its first owner's completion, and the
@@ -489,6 +561,7 @@ class PagedCache:
         if not self._grant_safe(n_pages - len(shared), 0):
             for pid in shared:
                 self._ref[pid] -= 1
+            self.last_deny = "pool"
             return None                      # admission control, not OOM
         fresh = self._take_fresh(n_pages - len(shared))
         for pid in fresh:
@@ -507,11 +580,13 @@ class PagedCache:
         self._page_table_dev = None
         self._slot_pages[slot] = pages
         self._slot_shared[slot] = len(shared)
+        self._charge(slot, tenant, n_pages)
         return len(shared) * self.page
 
     # ------------------------------------------------- chunked allocation ----
     def alloc_chunked(self, slot: int, length: int, first: int,
-                      prefix: Optional[np.ndarray] = None) -> Optional[int]:
+                      prefix: Optional[np.ndarray] = None,
+                      tenant: Optional[str] = None) -> Optional[int]:
         """Admit ``slot`` for chunked prefill: claim only the pages covering
         the first ``first`` positions now; the rest of the ``length``-position
         footprint (later prompt chunks + the decode tail) is recorded as this
@@ -530,6 +605,13 @@ class PagedCache:
         assert not self._slot_pages[slot], f"slot {slot} already allocated"
         assert 0 < first <= length <= self.S, (first, length, self.S)
         n_total = self.pages_needed(length)
+        self.last_deny = None
+        # quota charges the FULL footprint here, at admission — later
+        # ``extend`` calls draw down an already-charged reservation, so a
+        # mid-prefill slot can banker-stall but never quota-stall
+        if not self._quota_ok(tenant, n_total):
+            self.last_deny = "quota"
+            return None
         shared, _ = self._match_shared(prefix, n_total)
         n_first = max(self.pages_needed(first) - len(shared), 0)
         remaining = n_total - len(shared) - n_first
@@ -538,6 +620,7 @@ class PagedCache:
         if not self._grant_safe(n_first, remaining):
             for pid in shared:
                 self._ref[pid] -= 1
+            self.last_deny = "pool"
             return None
         fresh = self._take_fresh(n_first)
         for pid in fresh:
@@ -549,6 +632,7 @@ class PagedCache:
         self._slot_pages[slot] = pages
         self._slot_shared[slot] = len(shared)
         self._slot_need[slot] = remaining
+        self._charge(slot, tenant, n_total)
         return len(shared) * self.page
 
     def extend(self, slot: int, cover: int) -> bool:
@@ -726,6 +810,15 @@ class PagedCache:
         self._slot_shared[slot] = 0
         self._slot_need[slot] = 0
         self._shielded.discard(slot)
+        tenant = self._slot_tenant[slot]
+        if tenant is not None:
+            left = self._tenant_pages[tenant] - self._slot_charge[slot]
+            if left:
+                self._tenant_pages[tenant] = left
+            else:
+                del self._tenant_pages[tenant]
+            self._slot_tenant[slot] = None
+            self._slot_charge[slot] = 0
         self.page_table[slot, :] = 0    # point the freed slot at scratch
         self._page_table_dev = None
 
@@ -745,7 +838,8 @@ class PagedCache:
             page_size=self.page, pages_total=usable, pages_in_use=in_use,
             pages_shared=int((self._ref > 1).sum()),
             mesh_chips=sharded, bytes_per_chip=self.P * pb // sharded,
-            kv_dtype=self.kv_dtype, bytes_scales=scale_b)
+            kv_dtype=self.kv_dtype, bytes_scales=scale_b,
+            tenant_pages=dict(self._tenant_pages))
 
 
 # ------------------------------------------------------------- factory ----

@@ -236,6 +236,161 @@ def test_locality_aware_free_list_never_changes_admissions(ops, chips):
         (sl.pages_in_use, sl.bytes_reserved, sl.slots_in_use)
 
 
+# ---------------------------------------------------------------- tenancy ----
+
+# op stream over a quota'd pool: tenants "a"/"b" are capped, "c" is not
+tenant_ops_st = st.lists(
+    st.tuples(st.sampled_from(["alloc", "alloc_chunked", "extend",
+                               "free", "evict"]),
+              st.integers(0, 3),                  # slot
+              st.integers(1, 24),                 # footprint positions
+              st.sampled_from(["a", "b", "c"])),  # tenant
+    min_size=1, max_size=30)
+
+
+@given(ops=tenant_ops_st, qa=st.integers(1, 8), qb=st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_tenant_pages_never_exceed_quota(ops, qa, qb):
+    """Under random alloc/alloc_chunked/extend/free/evict streams a quota'd
+    tenant's charged pages never exceed its cap, charges always equal the
+    sum of its live slots' footprints, a quota deny never perturbs the pool
+    (refcounts/free lists bitwise unchanged), and a fully-drained pool
+    carries no residual charges — checked after every op."""
+    from repro.serve.kvcache import PagedCache
+    kv = PagedCache(_alloc_lm(), 4, 24, dtype=jnp.float32, page_size=4,
+                    num_pages=12)
+    quota = {"a": qa, "b": qb}
+    for t, q in quota.items():
+        kv.set_quota(t, q)
+    footprint = {}                      # slot -> positions to cover
+    for kind, slot, length, tenant in ops:
+        length = min(length, kv.S)
+        if kind in ("alloc", "alloc_chunked") and not kv._slot_pages[slot]:
+            before = (list(kv._ref), [list(c) for c in kv._free_chip])
+            if kind == "alloc":
+                got = kv.alloc(slot, length, tenant=tenant)
+            else:
+                got = kv.alloc_chunked(slot, length, min(4, length),
+                                       tenant=tenant)
+            if got is None:
+                if kv.last_deny == "quota":     # denial leaves no residue
+                    assert (list(kv._ref),
+                            [list(c) for c in kv._free_chip]) == before
+            else:
+                footprint[slot] = length
+        elif kind == "extend" and kv._slot_need[slot] > 0:
+            have = len(kv._slot_pages[slot]) * kv.page
+            kv.extend(slot, min(have + kv.page, footprint[slot]))
+        elif kind in ("free", "evict") and kv._slot_pages[slot]:
+            (kv.free if kind == "free" else kv.evict)(slot)
+            footprint.pop(slot, None)
+        for t, q in quota.items():
+            assert kv.tenant_pages(t) <= q, (t, kind)
+        by_tenant = {}
+        for s in range(4):
+            t = kv._slot_tenant[s]
+            if t is not None and kv._slot_pages[s]:
+                by_tenant[t] = by_tenant.get(t, 0) + kv._slot_charge[s]
+        assert by_tenant == {t: n for t, n in kv._tenant_pages.items() if n}
+    for slot in range(4):
+        if kv._slot_pages[slot]:
+            kv.free(slot)
+    assert kv._tenant_pages == {} and kv.memory_stats().tenant_pages == {}
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_preemption_frees_enough_to_admit_preemptor(seed):
+    """The engine's preemption loop (evict ``next_victim`` until ``alloc``
+    succeeds) admits the high-priority preemptor iff the free pool plus the
+    eligible victims' exclusively-owned pages can ever cover its footprint
+    — and every eviction it takes is of a strictly-lower-priority slot."""
+    from repro.serve.kvcache import PagedCache
+    from repro.serve.tenancy import Victim, next_victim
+    rng = np.random.default_rng(seed)
+    kv = PagedCache(_alloc_lm(), 5, 24, dtype=jnp.float32, page_size=4,
+                    num_pages=12)
+    prompt = np.arange(8, dtype=np.int32)
+    prio = {}
+    for slot in range(4):
+        if rng.random() < 0.8:
+            # half the slots share a prompt prefix, so some victim pages
+            # are pinned by other references and not actually freeable
+            pref = prompt if rng.random() < 0.5 else None
+            if kv.alloc(slot, int(rng.integers(1, 20)), prefix=pref) is None:
+                continue
+            prio[slot] = int(rng.choice([0, 0, 50]))
+    need = int(rng.integers(1, 24))
+    could_free = sum(kv.slot_freeable(s) for s, p in prio.items() if p < 100)
+    free_now = len([p for c in kv._free_chip for p in c])
+    evicted = []
+    while True:
+        if kv.alloc(4, need) is not None:
+            admitted = True
+            break
+        cands = [Victim(s, prio[s], True, kv.slot_freeable(s))
+                 for s in prio if s not in evicted]
+        v = next_victim(cands, 100)
+        if v is None:
+            admitted = False
+            break
+        assert v.priority < 100
+        kv.evict(v.slot)
+        evicted.append(v.slot)
+    assert admitted == (free_now + could_free >= kv.pages_needed(need)), \
+        (admitted, free_now, could_free, need, evicted)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_banker_never_deadlocks_under_random_preemption(seed):
+    """Random schedule of chunked admissions, chunk extends, completions,
+    and preemptive evictions (of fully-prefilled slots only — the engine
+    never evicts mid-prefill): the banker's safety invariant must keep the
+    system live, i.e. whenever any slot is mid-prefill, either some extend
+    makes progress this sweep or a fully-covered slot exists whose
+    completion will free pages.  Every request drains within a bounded
+    number of sweeps."""
+    from repro.serve.kvcache import PagedCache
+    rng = np.random.default_rng(seed)
+    kv = PagedCache(_alloc_lm(), 4, 24, dtype=jnp.float32, page_size=4,
+                    num_pages=12)
+    pending = [int(rng.integers(5, 25)) for _ in range(8)]   # footprints
+    covered = {}                      # slot -> (covered, footprint)
+    for _ in range(400):
+        if not pending and not covered:
+            break
+        # admit into free slots (first chunk only, banker-checked)
+        for slot in range(4):
+            if pending and not kv._slot_pages[slot]:
+                length = min(pending[0], kv.S)
+                if kv.alloc_chunked(slot, length, min(4, length)) is not None:
+                    covered[slot] = [min(4, length), length]
+                    pending.pop(0)
+        progressed = False
+        # one sweep: try to advance every mid-prefill slot a chunk
+        for slot in sorted(covered, key=lambda s: rng.random()):
+            cov, length = covered[slot]
+            if cov < length and kv.extend(slot, min(cov + 4, length)):
+                covered[slot][0] = min(cov + 4, length)
+                progressed = True
+        full = [s for s, (cov, length) in covered.items() if cov >= length]
+        stalled = [s for s, (cov, length) in covered.items() if cov < length]
+        # THE liveness claim: a stalled prefill always has a completion
+        # coming (banker-safe grants can never mutually deadlock)
+        if stalled and not progressed:
+            assert full, (stalled, covered)
+        if full:
+            victim = full[int(rng.integers(len(full)))]
+            if rng.random() < 0.3:    # preemption: evict + resubmit
+                kv.evict(victim)
+                pending.append(covered.pop(victim)[1])
+            else:                     # decode finished
+                kv.free(victim)
+                covered.pop(victim)
+    assert not pending and not covered, (pending, covered)
+
+
 # ---------------------------------------------------------------- storage ----
 
 @given(cap=st.integers(2, 20), n=st.integers(1, 40))

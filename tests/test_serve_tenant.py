@@ -1,0 +1,325 @@
+"""Engine-level multi-tenant SLO scheduling: per-tenant page quotas inside
+the paged banker, priority-ordered admission, preemptive eviction with
+recompute-on-resume, and the per-class telemetry.
+
+The correctness bar: tenancy is a *scheduling* layer, so a tenanted engine
+must emit bitwise-identical token streams to the untenanted engine for
+every request it does not reorder — and a preempted stream, greedy or
+seeded, must resume exactly where it left off (the resume prefill replays
+prompt + generated tokens and re-samples the discarded pending token at
+the same stream step).
+
+Policy units (``next_victim``, ``TenancyConfig``) live in
+tests/test_tenancy.py; the adversarial SLO soak with measured TTFT
+contrast is ``make bench-tenant``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS
+from repro.models import LM
+from repro.serve import (PriorityClass, Request, SamplingParams, ServeEngine,
+                         TenancyConfig, TenantSpec)
+
+
+def small_lm(name="llama3.2-3b", layers=2):
+    cfg = dataclasses.replace(CONFIGS[name].reduced(), dtype="float32",
+                              num_layers=layers)
+    lm = LM(cfg)
+    return cfg, lm, lm.init(jax.random.key(0))
+
+
+def cache_only_lm(name="llama3.2-3b", layers=2):
+    cfg = dataclasses.replace(CONFIGS[name].reduced(), dtype="float32",
+                              num_layers=layers)
+    return cfg, LM(cfg)
+
+
+def _streams(eng):
+    return sorted((r.id, tuple(r.out_tokens)) for r in eng.finished)
+
+
+def two_class(bulk_quota=None, preemption=True, classes=None):
+    return TenancyConfig([TenantSpec("chat", "interactive"),
+                          TenantSpec("bulk", "batch",
+                                     page_quota=bulk_quota)],
+                         classes=classes, preemption=preemption)
+
+
+# -------------------------------------------------------- cache quotas ----
+
+def test_paged_quota_accounting_and_eviction():
+    """PagedCache-level: quota denies are distinguishable from pool denies,
+    per-tenant charges cover the full footprint (shared pages included) and
+    drain on free, and evict() reports exclusively-owned pages only."""
+    _, lm = cache_only_lm()
+    kv = lm.init_cache(4, 32, dtype=jnp.float32, backend="paged",
+                       page_size=4, num_pages=16)
+    kv.set_quota("bulk", 6)
+    prompt = np.arange(8, dtype=np.int32)        # 2 full shareable pages
+
+    assert kv.alloc(0, 12, prefix=prompt, tenant="bulk") is not None
+    assert kv.tenant_pages("bulk") == 3 and kv.last_deny is None
+    # prefix sharing halves the *pool* cost of slot 1 but its quota charge
+    # is still the full footprint — quotas meter entitlement, not luck
+    assert kv.alloc(1, 12, prefix=prompt, tenant="bulk") is not None
+    st = kv.memory_stats()
+    assert st.tenant_pages == {"bulk": 6}
+    assert st.pages_shared == 2
+
+    # at cap: one more page is a quota deny (pool has plenty free)
+    assert kv.alloc(2, 4, tenant="bulk") is None
+    assert kv.last_deny == "quota"
+    # other tenants are untouched by bulk's cap
+    assert kv.alloc(2, 4, tenant="chat") is not None
+    assert kv.last_deny is None
+
+    # slot 1 owns 1 exclusive page (2 are shared with slot 0): evicting it
+    # frees exactly that page but refunds the full 3-page quota charge
+    assert kv.slot_freeable(1) == 1
+    assert kv.evict(1) == 1
+    assert kv.tenant_pages("bulk") == 3
+    kv.free(0)
+    kv.free(2)
+    assert kv.memory_stats().tenant_pages == {}
+
+
+def test_quota_unset_and_quotaless_tenant():
+    _, lm = cache_only_lm()
+    kv = lm.init_cache(2, 32, dtype=jnp.float32, backend="paged",
+                       page_size=4, num_pages=8)
+    kv.set_quota("bulk", 2)
+    assert kv.alloc(0, 12, tenant="bulk") is None      # 3 pages > quota 2
+    assert kv.last_deny == "quota"
+    kv.set_quota("bulk", None)                         # lift the cap
+    assert kv.alloc(0, 12, tenant="bulk") is not None
+    # untracked tenants and tenant=None never hit quota checks
+    assert kv.alloc(1, 12, tenant=None) is not None
+
+
+# ------------------------------------------------- engine construction ----
+
+def test_tenancy_validation_against_backend():
+    cfg, lm, params = small_lm()
+    with pytest.raises(ValueError, match="quota"):
+        ServeEngine(lm, params, 2, 32, cache_backend="contiguous",
+                    tenancy=two_class(bulk_quota=4))
+    with pytest.raises(ValueError, match="preemption"):
+        ServeEngine(lm, params, 2, 32, cache_backend="contiguous",
+                    tenancy=two_class())
+    # quota-less, preemption-less tenancy still works on dense rows
+    # (priority-ordered admission only)
+    eng = ServeEngine(lm, params, 2, 32, cache_backend="contiguous",
+                      tenancy=two_class(preemption=False))
+    eng.submit(Request(0, np.arange(4, dtype=np.int32), max_new_tokens=2,
+                       tenant="chat"))
+    eng.run_until_drained()
+    assert len(eng.finished) == 1
+
+    with pytest.raises(ValueError, match="unknown tenant"):
+        eng.submit(Request(1, np.arange(4, dtype=np.int32),
+                           max_new_tokens=2, tenant="nobody"))
+
+    # a class prefill budget below the chunk size could never dispatch
+    starved = {"batch": PriorityClass("batch", 0, prefill_budget=4)}
+    with pytest.raises(ValueError, match="prefill_budget"):
+        ServeEngine(lm, params, 2, 64, cache_backend="paged", page_size=8,
+                    prefill_chunk=8, tenancy=two_class(classes=starved))
+
+
+# ---------------------------------------------------- admission policy ----
+
+def test_priority_admission_and_quota_skip():
+    """One pass over a mixed queue: interactive admits first even when
+    submitted last; a quota-capped bulk request is *skipped* (not a
+    head-of-line block) so the next bulk request behind it still admits."""
+    cfg, lm, params = small_lm()
+    rng = np.random.default_rng(0)
+    eng = ServeEngine(lm, params, max_batch=4, max_seq=64,
+                      cache_backend="paged", page_size=8,
+                      # a slot stays free when bulk #2 is tried, so the
+                      # quota — not the slot limit — is what denies it
+                      num_pages=16, tenancy=two_class(bulk_quota=4))
+    p = lambda n: rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+    eng.submit(Request(0, p(8), max_new_tokens=4, tenant="bulk"))   # 2 pages
+    eng.submit(Request(1, p(8), max_new_tokens=4, tenant="bulk"))   # 2 pages
+    eng.submit(Request(2, p(8), max_new_tokens=4, tenant="bulk"))   # denied
+    eng.submit(Request(3, p(4), max_new_tokens=4, tenant="chat"))
+    eng.step()
+    admitted = {r.id for r in eng.slot_req if r is not None}
+    assert admitted == {0, 1, 3}          # chat in-slot ahead of bulk #2
+    assert [r.id for r in eng.queue] == [2]
+    assert eng.reg.counter("serve_quota_denied_total").get() == 1
+    assert eng.reg.counter("serve_admission_deferred_total").get(
+        {"reason": "quota_denied"}) == 1
+    assert eng.kv.tenant_pages("bulk") == 4
+    # gauges exported for both the charge and the configured cap
+    assert eng.reg.gauge("serve_tenant_pages_in_use").get(
+        {"tenant": "bulk"}) == 4
+    assert eng.reg.gauge("serve_tenant_quota_pages").get(
+        {"tenant": "bulk"}) == 4
+    eng.run_until_drained()
+    assert len(eng.finished) == 4
+    assert eng.kv.memory_stats().tenant_pages == {}
+
+
+def test_deferred_total_reason_split_sums_to_unlabeled():
+    """The satellite contract: the unlabeled serve_admission_deferred_total
+    series (what pre-tenancy dashboards read) must equal the sum of its
+    reason-labeled series."""
+    cfg, lm, params = small_lm()
+    rng = np.random.default_rng(1)
+    eng = ServeEngine(lm, params, max_batch=2, max_seq=64,
+                      cache_backend="paged", page_size=8, num_pages=8,
+                      tenancy=two_class(bulk_quota=2, preemption=False))
+    p = lambda n: rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+    for i in range(3):
+        eng.submit(Request(i, p(12), max_new_tokens=4, tenant="bulk"))
+    eng.submit(Request(3, p(12), max_new_tokens=4, tenant="chat"))
+    eng.run_until_drained()
+    c = eng.reg.counter("serve_admission_deferred_total")
+    pool = c.get({"reason": "pool_exhausted"})
+    quota = c.get({"reason": "quota_denied"})
+    assert quota > 0
+    assert c.get() == pool + quota
+    assert eng.reg.counter("serve_quota_denied_total").get() == quota
+
+
+# ----------------------------------------------- preemption and resume ----
+
+def _mixed_run(sampling=None, prefill_chunk=0, preemption=True):
+    """Fill every slot with bulk decodes, then submit chat mid-flight so
+    admission *must* preempt.  Returns the drained engine."""
+    cfg, lm, params = small_lm()
+    rng = np.random.default_rng(7)
+    kw = dict(prefill_chunk=prefill_chunk) if prefill_chunk else {}
+    eng = ServeEngine(lm, params, max_batch=2, max_seq=64,
+                      cache_backend="paged", page_size=8, num_pages=12,
+                      tenancy=two_class(preemption=preemption), **kw)
+    p = lambda n: rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+    sp = sampling or SamplingParams()
+    for i in range(2):
+        eng.submit(Request(i, p(10), max_new_tokens=12, tenant="bulk",
+                           sampling=sp))
+    for _ in range(4):
+        eng.step()                        # bulk decoding in both slots
+    eng.submit(Request(2, p(6), max_new_tokens=4, tenant="chat",
+                       sampling=sp))
+    eng.run_until_drained()
+    return eng
+
+
+@pytest.mark.parametrize("chunk", [0, 8])
+def test_preemption_resume_streams_bitwise(chunk):
+    """Preemption must be invisible in the token streams: the preempted
+    bulk stream resumes bit-identically (greedy), and the chat stream
+    matches a run where it had the pool to itself."""
+    eng = _mixed_run(prefill_chunk=chunk)
+    assert eng.reg.counter("serve_preemptions_total").get() >= 1
+    preempted = [r for r in eng.finished if r.preemptions > 0]
+    assert preempted and all(r.tenant == "bulk" for r in preempted)
+    assert all(len(r.out_tokens) == 12 for r in eng.finished
+               if r.tenant == "bulk")
+
+    # oracle: same trace, no tenancy (chat waits instead of preempting)
+    cfg, lm, params = small_lm()
+    rng = np.random.default_rng(7)
+    oracle = ServeEngine(lm, params, max_batch=2, max_seq=64,
+                         cache_backend="paged", page_size=8, num_pages=12,
+                         **(dict(prefill_chunk=chunk) if chunk else {}))
+    p = lambda n: rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+    for i in range(2):
+        oracle.submit(Request(i, p(10), max_new_tokens=12))
+    for _ in range(4):
+        oracle.step()
+    oracle.submit(Request(2, p(6), max_new_tokens=4))
+    oracle.run_until_drained()
+    assert _streams(eng) == _streams(oracle)
+    assert oracle.reg.counter("serve_preemptions_total").get() == 0
+
+
+def test_preemption_resume_seeded_sampling_bitwise():
+    """The resume-aware sampling steps: a seeded non-greedy stream must
+    also continue bit-identically across preemption — the discarded
+    pending token is re-drawn at the same (seed, id, step) triple."""
+    sp = SamplingParams(temperature=0.8, top_k=20, top_p=0.95, seed=9)
+    eng = _mixed_run(sampling=sp)
+    assert eng.reg.counter("serve_preemptions_total").get() >= 1
+
+    solo = _mixed_run(sampling=sp, preemption=False)
+    assert solo.reg.counter("serve_preemptions_total").get() == 0
+    assert _streams(eng) == _streams(solo)
+
+
+def test_no_preemption_mode_waits_instead():
+    eng = _mixed_run(preemption=False)
+    assert eng.reg.counter("serve_preemptions_total").get() == 0
+    assert all(r.preemptions == 0 for r in eng.finished)
+    assert len(eng.finished) == 3
+
+
+def test_equal_priority_never_preempts():
+    """Two bulk tenants contending for one slot must take turns via
+    completion, never evict each other (anti-livelock)."""
+    cfg, lm, params = small_lm()
+    rng = np.random.default_rng(3)
+    ten = TenancyConfig([TenantSpec("bulk_a", "batch"),
+                         TenantSpec("bulk_b", "batch")])
+    eng = ServeEngine(lm, params, max_batch=1, max_seq=64,
+                      cache_backend="paged", page_size=8, num_pages=4,
+                      tenancy=ten)
+    p = lambda n: rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+    eng.submit(Request(0, p(6), max_new_tokens=4, tenant="bulk_a"))
+    eng.submit(Request(1, p(6), max_new_tokens=4, tenant="bulk_b"))
+    eng.run_until_drained()
+    assert eng.reg.counter("serve_preemptions_total").get() == 0
+    assert len(eng.finished) == 2
+
+
+# ----------------------------------------------- per-class chunk budget ----
+
+def test_class_prefill_budget_caps_chunks_per_iteration():
+    """With a batch-class budget of one chunk, two queued bulk prompts
+    land one chunk per iteration even though the global budget would
+    allow two; without the cap both dispatch in the same iteration."""
+    cfg, lm, params = small_lm()
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+               for _ in range(2)]
+
+    def first_step_chunks(classes):
+        eng = ServeEngine(lm, params, max_batch=2, max_seq=64,
+                          cache_backend="paged", page_size=8,
+                          prefill_chunk=8, prefill_budget=16,
+                          tenancy=two_class(classes=classes))
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p.copy(), max_new_tokens=2,
+                               tenant="bulk"))
+        eng.step()
+        n = eng.reg.counter("serve_prefill_chunks_total").get()
+        eng.run_until_drained()
+        assert len(eng.finished) == 2
+        return n, _streams(eng)
+
+    capped = {"batch": PriorityClass("batch", 0, prefill_budget=8)}
+    n_capped, streams_capped = first_step_chunks(capped)
+    n_free, streams_free = first_step_chunks(None)
+    assert n_capped == 1 and n_free == 2
+    assert streams_capped == streams_free      # pacing, not content
+
+
+# ------------------------------------------------------ class telemetry ----
+
+def test_per_class_latency_histograms():
+    eng = _mixed_run()
+    ttft = eng.reg.histogram("serve_class_ttft_seconds")
+    itl = eng.reg.histogram("serve_class_itl_seconds")
+    assert ttft.count({"class": "interactive"}) == 1
+    assert ttft.count({"class": "batch"}) == 2
+    # every emitted token past the first records an inter-token gap
+    assert itl.count({"class": "batch"}) == 2 * (12 - 1)
+    assert itl.count({"class": "interactive"}) == 4 - 1

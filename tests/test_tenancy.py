@@ -1,0 +1,162 @@
+"""Multi-tenant units on both resource layers.
+
+* The seed cluster layer (``repro.core.tenancy``): namespace quotas over
+  the gang scheduler — create/resize/submit/complete bookkeeping, quota
+  rejection accounting, and the usage report.  These classes shipped with
+  the seed but had no dedicated tests.
+* The serving layer (``repro.serve.tenancy``): the shared priority-class
+  registry, ``TenancyConfig`` validation + CLI parsing, and the pure
+  ``next_victim`` preemption policy that the engine builds on.
+
+Engine-level integration (quota denies, preemption + resume, per-class
+budgets) lives in tests/test_serve_tenant.py.
+"""
+import pytest
+
+from repro.core.cluster import SimCluster
+from repro.core.scheduler import GangScheduler, Job, JobState
+from repro.core.telemetry import MetricsRegistry
+from repro.core.tenancy import (BATCH, DEFAULT_CLASSES, INTERACTIVE,
+                                PriorityClass, TenantScheduler)
+from repro.serve.tenancy import (TenancyConfig, TenantSpec, Victim,
+                                 next_victim)
+
+
+# ------------------------------------------------------------------ core ----
+def _tenant_sched(n_nodes=20, buffer_fraction=0.0, reg=None):
+    cluster = SimCluster(n_nodes, seed=0)
+    return TenantScheduler(GangScheduler(cluster,
+                                         buffer_fraction=buffer_fraction),
+                           registry=reg)
+
+
+def test_namespace_create_and_quota_accounting():
+    reg = MetricsRegistry()
+    ts = _tenant_sched(reg=reg)
+    ns = ts.create_namespace("train", 12, priority=5)
+    ts.create_namespace("serve", 8)
+    assert ns.available == 12
+    assert reg.gauge("tenant_quota_nodes").get({"namespace": "train"}) == 12
+
+    assert ts.submit("train", Job("j1", 10))
+    assert ns.used_nodes == 10 and ns.available == 2
+    assert reg.gauge("tenant_used_nodes").get({"namespace": "train"}) == 10
+    # namespace priority floors the job priority
+    assert ts.sched.jobs["j1"].priority == 5
+    assert ts.sched.jobs["j1"].state == JobState.RUNNING
+
+    # over-quota submit is rejected and counted, scheduler never sees it
+    assert not ts.submit("train", Job("j2", 3))
+    assert "j2" not in ts.sched.jobs
+    assert reg.counter("tenant_quota_rejections").get(
+        {"namespace": "train"}) == 1
+
+    ts.complete("j1")
+    assert ns.used_nodes == 0
+    assert ts.sched.jobs["j1"].state == JobState.DONE
+    assert "j1" not in ts.job_ns
+
+
+def test_namespace_overcommit_rejected():
+    ts = _tenant_sched(n_nodes=10)
+    ts.create_namespace("a", 7)
+    with pytest.raises(AssertionError):
+        ts.create_namespace("b", 4)          # 7 + 4 > 10 nodes
+
+
+def test_resize_moves_capacity_between_tenants():
+    ts = _tenant_sched(n_nodes=10)
+    a = ts.create_namespace("train", 6)
+    b = ts.create_namespace("serve", 4)
+    assert ts.submit("train", Job("j1", 4))
+    # can't shrink below live usage, can't grow past the cluster
+    with pytest.raises(AssertionError):
+        ts.resize_namespace("train", 3)
+    with pytest.raises(AssertionError):
+        ts.resize_namespace("serve", 5)      # 6 + 5 > 10
+    # the paper's training -> inference capacity shift
+    ts.resize_namespace("train", 4)
+    ts.resize_namespace("serve", 6)
+    assert a.quota_nodes == 4 and b.quota_nodes == 6
+    assert ts.submit("serve", Job("j2", 6))
+
+
+def test_usage_report_lists_every_namespace():
+    ts = _tenant_sched()
+    ts.create_namespace("train", 12, priority=5)
+    ts.create_namespace("serve", 8)
+    ts.submit("train", Job("j1", 3))
+    report = ts.usage_report()
+    assert report == ["train: 3/12 nodes (prio 5)",
+                      "serve: 0/8 nodes (prio 0)"]
+
+
+# -------------------------------------------------------- class registry ----
+def test_default_classes_shared_registry():
+    assert DEFAULT_CLASSES == {"interactive": INTERACTIVE, "batch": BATCH}
+    assert INTERACTIVE.priority > BATCH.priority
+    assert not INTERACTIVE.preemptible and BATCH.preemptible
+    # the serving layer re-exports the same objects — one registry
+    from repro.serve.tenancy import DEFAULT_CLASSES as serve_classes
+    assert serve_classes is DEFAULT_CLASSES
+
+
+# --------------------------------------------------------- TenancyConfig ----
+def test_tenancy_config_lookup_helpers():
+    cfg = TenancyConfig([TenantSpec("chat", "interactive"),
+                         TenantSpec("bulk", "batch", page_quota=10)])
+    assert cfg.spec("bulk").page_quota == 10
+    assert cfg.class_of("chat") is INTERACTIVE
+    assert cfg.priority_of("chat") > cfg.priority_of("bulk")
+    assert cfg.has_quotas()
+    assert not TenancyConfig([TenantSpec("a")]).has_quotas()
+    with pytest.raises(ValueError):
+        cfg.spec("nobody")
+
+
+@pytest.mark.parametrize("tenants, classes", [
+    ([], None),                                              # no tenants
+    ([TenantSpec("a"), TenantSpec("a")], None),              # duplicate
+    ([TenantSpec("a", cls="gold")], None),                   # unknown class
+    ([TenantSpec("a", page_quota=0)], None),                 # quota < 1
+    ([TenantSpec("a")],
+     {"oops": PriorityClass("batch", 0)}),                   # key != name
+])
+def test_tenancy_config_validation(tenants, classes):
+    with pytest.raises(ValueError):
+        TenancyConfig(tenants, classes=classes)
+
+
+def test_tenancy_config_parse_cli_strings():
+    cfg = TenancyConfig.parse("chat=interactive,bulk=batch",
+                              "bulk=12", preemption=False)
+    assert sorted(cfg.tenants) == ["bulk", "chat"]
+    assert cfg.spec("bulk").page_quota == 12
+    assert cfg.spec("chat").page_quota is None
+    assert not cfg.preemption
+    with pytest.raises(ValueError):
+        TenancyConfig.parse("chat=interactive", "bulk=12")   # unknown tenant
+    with pytest.raises(ValueError):
+        TenancyConfig.parse("chat=gold", "")                 # unknown class
+    with pytest.raises(ValueError):
+        TenancyConfig.parse("chat=interactive", "chat=zero")  # bad int
+
+
+# ------------------------------------------------------------ next_victim ----
+def test_next_victim_policy():
+    lo = Victim(slot=0, priority=0, preemptible=True, freeable=4)
+    lo2 = Victim(slot=1, priority=0, preemptible=True, freeable=7)
+    mid = Victim(slot=2, priority=50, preemptible=True, freeable=9)
+    pinned = Victim(slot=3, priority=0, preemptible=False, freeable=99)
+
+    # lowest priority class first; within it, most freeable pages
+    assert next_victim([lo, lo2, mid, pinned], 100) == lo2
+    # slot index breaks exact (priority, freeable) ties deterministically
+    tie = Victim(slot=9, priority=0, preemptible=True, freeable=7)
+    assert next_victim([tie, lo2], 100) == lo2
+    # non-preemptible classes are never chosen, whatever they'd free
+    assert next_victim([pinned], 100) is None
+    # equal priority never preempts (anti-livelock), only strictly lower
+    assert next_victim([lo, lo2], 0) is None
+    assert next_victim([mid], 50) is None
+    assert next_victim([], 100) is None
