@@ -8,7 +8,7 @@ PY ?= python
 
 .PHONY: test test-multidevice test-all smoke bench bench-serve \
 	bench-decode bench-sharded bench-chunked bench-quant bench-tenant \
-	docs-check dev-deps
+	bench-faults docs-check dev-deps
 
 # tier-1: the fast single-process suite.  The multi-device subprocess
 # files are split into `test-multidevice` (their own CI job) so this —
@@ -83,6 +83,18 @@ bench-quant:
 bench-tenant:
 	PYTHONPATH=src:. $(PY) -c "from benchmarks import bench_serving; \
 	[print(f'{n},{u:.1f},{d}') for n, u, d in bench_serving.run_tenant()]"
+
+# fault-injection recovery soak: a deterministic FaultPlan fires every
+# transient seam (chunked-prefill stall, non-finite logits, poisoned KV
+# page, transient dispatch error) plus a whole-chip KV failure — asserts
+# every stream (recovered victims included) is bitwise identical to the
+# fault-free run, chip victims actually recover, and nothing dead-letters;
+# reports the goodput dip and recovery latency; JSON lands in
+# benchmarks/out/fault_recovery.json and one trajectory entry is appended
+# to the committed BENCH_serving.json
+bench-faults:
+	PYTHONPATH=src:. $(PY) -c "from benchmarks import bench_serving; \
+	[print(f'{n},{u:.1f},{d}') for n, u, d in bench_serving.run_faults()]"
 
 # documentation gate: every relative link in tracked *.md files must
 # resolve, and docs/telemetry.md must list exactly the metrics the engine

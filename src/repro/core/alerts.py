@@ -130,8 +130,42 @@ def cuda_error_rule() -> AlertRule:
     return AlertRule("gpu_cuda_error", "critical", ev)
 
 
+def serve_dead_letter_rule() -> AlertRule:
+    """A request terminally failed recovery (retries exhausted / capacity
+    lost after a chip failure) — the serving analogue of an unrecoverable
+    node error, so critical like ``gpu_cuda_error``."""
+    def ev(reg):
+        c = reg._metrics.get("serve_dead_letter_total")
+        if c is None:
+            return []
+        return [(dict(ls),
+                 f"{v:.0f} request(s) dead-lettered "
+                 f"(reason: {dict(ls).get('reason', '?')})")
+                for ls, v in c.labels_values() if v > 0 and ls]
+    return AlertRule("serve_dead_letter", "critical", ev)
+
+
+def serve_retry_storm_rule(threshold: int = 8) -> AlertRule:
+    """Recoveries are normal in ones and twos; a pile-up under one reason
+    label means a persistent fault the retry loop cannot clear."""
+    def ev(reg):
+        c = reg._metrics.get("serve_stream_retries_total")
+        if c is None:
+            return []
+        return [(dict(ls),
+                 f"{v:.0f} stream recoveries "
+                 f"(reason: {dict(ls).get('reason', '?')}) — "
+                 "persistent fault suspected")
+                for ls, v in c.labels_values() if v >= threshold and ls]
+    return AlertRule("serve_retry_storm", "warning", ev)
+
+
 DEFAULT_RULES = (node_down_rule, autopilot_err_rule, pcie_degraded_rule,
                  step_time_regression_rule, cuda_error_rule)
+
+#: the serving-path rule set: pass ``rules=DEFAULT_RULES + SERVE_RULES``
+#: (or just ``SERVE_RULES``) to an AlertManager wired into a ServeEngine
+SERVE_RULES = (serve_dead_letter_rule, serve_retry_storm_rule)
 
 
 class AlertManager:

@@ -184,3 +184,47 @@ class Autopilot:
 
     def err_nodes(self, results: List[CheckResult]) -> List[int]:
         return sorted({r.node_id for r in results if not r.passed})
+
+
+def serve_light_checks(engine) -> Dict[str, bool]:
+    """Light (non-intrusive) health checks over a live ``ServeEngine`` —
+    the Autopilot idiom applied to the serving path, run in-loop every
+    ``health_every`` iterations when an ``AlertManager`` is wired in.
+
+    Exported as ``autopilot_serve_*`` gauges (1.0 = PASS, 0.0 = ERR) so the
+    existing ``autopilot_err`` alert machinery and dashboards cover serving
+    without new plumbing:
+
+    * ``dispatch_invariant`` — exactly one fused decode+sample dispatch per
+      decode iteration (the engine's core perf contract);
+    * ``streams_progressing`` — no live slot has gone a full watchdog
+      window (or 64 iterations when the watchdog is off) without emitting
+      a token, landing a chunk, or being admitted;
+    * ``cache_invariants`` — ``PagedCache.verify()`` holds (only measured
+      in debug mode, ``verify_cache=True``, where its O(P + B·M) host walk
+      is already being paid).
+
+    Duck-typed on the engine (reg / slot_req / watchdog / kv attrs), so it
+    needs no import of the serve package."""
+    reg = engine.reg
+    results: Dict[str, bool] = {}
+    iters = reg.counter("serve_iterations_total").get()
+    disp = reg.counter("serve_decode_dispatches_total").get()
+    results["dispatch_invariant"] = disp == iters
+    window = engine.watchdog_iters or 64
+    results["streams_progressing"] = not any(
+        req is not None
+        and engine._iter - engine._last_progress.get(slot, engine._iter)
+        >= window
+        for slot, req in enumerate(engine.slot_req))
+    if engine.verify_cache and hasattr(engine.kv, "verify"):
+        try:
+            engine.kv.verify()
+            results["cache_invariants"] = True
+        except AssertionError:        # CacheInvariantError subclasses it
+            results["cache_invariants"] = False
+    for name, passed in results.items():
+        reg.gauge(f"autopilot_serve_{name}").set(float(passed))
+        reg.gauge("autopilot_node_ok").set(
+            float(passed), {"node": "serve", "check": f"serve_{name}"})
+    return results

@@ -25,6 +25,11 @@ contiguous dense rows via ``--cache-backend contiguous``.
         # multi-tenant SLO serving: priority-ordered admission, per-tenant
         # page quotas in the banker check, preemptive page eviction —
         # interactive traffic admits ahead of (and can preempt) batch
+    python -m repro.launch.serve --fault-plan nan_logits@5,poison_page@9 \
+        --watchdog-iters 8 --verify-cache   # fault-tolerant serving:
+        # injected faults are detected by the fused step's non-finite
+        # guard, quarantined streams resume *bitwise* via recompute-on-
+        # resume prefill, and the summary reports per-stream outcomes
 """
 from __future__ import annotations
 
@@ -126,6 +131,26 @@ def main():
     ap.add_argument("--no-priority", dest="priority", action="store_false",
                     help="disable preemption: quotas and priority-ordered "
                          "admission only")
+    ap.add_argument("--fault-plan", default="", metavar="PLAN",
+                    help="deterministic fault injection: comma-separated "
+                         "kind@iteration[:slot=N][:chip=N][:page=N][:dur=N] "
+                         "events (kinds: nan_logits, poison_page, "
+                         "chip_failure, stall_chunk, dispatch_error), e.g. "
+                         "'nan_logits@5,chip_failure@12:chip=1'.  Faulted "
+                         "streams are quarantined and resume bitwise via "
+                         "recompute-on-resume prefill")
+    ap.add_argument("--watchdog-iters", type=int, default=0, metavar="N",
+                    help="per-stream progress watchdog: recover any live "
+                         "slot that emits no token / lands no chunk for N "
+                         "engine iterations (0 = off)")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="recoveries a stream may consume before it "
+                         "dead-letters (error surfaced on the request; "
+                         "neighbour streams unaffected)")
+    ap.add_argument("--verify-cache", action="store_true",
+                    help="debug mode: run the PagedCache.verify() "
+                         "invariant sanitizer (refcounts, free lists, page "
+                         "tables, quotas) after every engine iteration")
     args = ap.parse_args()
 
     import dataclasses
@@ -145,7 +170,19 @@ def main():
                                       preemption=args.priority)
     elif args.quota:
         raise SystemExit("--quota requires --tenants")
+    fault_plan = None
+    if args.fault_plan:
+        from repro.serve import FaultPlan
+        fault_plan = FaultPlan.parse(args.fault_plan)
+    from repro.core.alerts import (AlertManager, DEFAULT_RULES, LogSink,
+                                   SERVE_RULES, SlackSink)
+    from repro.core.telemetry import MetricsRegistry
+    reg = MetricsRegistry()
+    slack = SlackSink()
+    alerts = AlertManager(reg, sinks=[slack, LogSink()],
+                          rules=DEFAULT_RULES + SERVE_RULES)
     eng = ServeEngine(lm, params, args.max_batch, args.max_seq,
+                      registry=reg,
                       cache_backend=args.cache_backend,
                       page_size=args.page_size, num_pages=args.num_pages,
                       prefix_sharing=not args.no_prefix_sharing,
@@ -153,7 +190,11 @@ def main():
                       kv_axis=args.mesh_axis,
                       prefill_chunk=args.prefill_chunk,
                       prefill_budget=args.prefill_budget,
-                      kv_dtype=args.kv_dtype, tenancy=tenancy)
+                      kv_dtype=args.kv_dtype, tenancy=tenancy,
+                      fault_plan=fault_plan,
+                      watchdog_iters=args.watchdog_iters,
+                      max_retries=args.max_retries,
+                      verify_cache=args.verify_cache, alerts=alerts)
 
     tenant_names = sorted(tenancy.tenants) if tenancy else []
     rng = np.random.default_rng(0)
@@ -167,14 +208,18 @@ def main():
                            sampling=SamplingParams(
                                temperature=args.temperature,
                                top_k=args.top_k, top_p=args.top_p, seed=i)))
-    done = eng.run_until_drained()
+    done = eng.run_until_drained(on_stuck="status")
     wall = time.perf_counter() - t0
     total_tokens = sum(len(r.out_tokens) for r in done)
     iters = eng.reg.counter("serve_iterations_total").get()
     decode = eng.reg.counter("serve_decode_dispatches_total").get()
     prefill = eng.reg.counter("serve_prefill_dispatches_total").get()
-    print(f"served {len(done)} requests, {total_tokens} tokens in "
-          f"{wall:.1f}s ({total_tokens/wall:.1f} tok/s)")
+    by_status = {}
+    for r in done:
+        by_status.setdefault(r.status, []).append(r)
+    outcome = ", ".join(f"{len(rs)} {s}" for s, rs in sorted(by_status.items()))
+    print(f"served {len(done)} requests ({outcome}), {total_tokens} tokens "
+          f"in {wall:.1f}s ({total_tokens/wall:.1f} tok/s)")
     print(f"device calls: {decode:.0f} fused decode+sample "
           f"({decode/max(iters,1):.2f}/iteration) + {prefill:.0f} prefill")
     print(f"TTFT p50 {eng.reg.histogram('serve_ttft_seconds').quantile(0.5)*1e3:.0f}ms "
@@ -229,6 +274,32 @@ def main():
                 print(f"  class {cls}: TTFT p50 "
                       f"{h.quantile(0.5, {'class': cls})*1e3:.0f}ms p99 "
                       f"{h.quantile(0.99, {'class': cls})*1e3:.0f}ms")
+    injected = sum(v for _, v in eng.reg.counter(
+        "serve_faults_injected_total").labels_values())
+    recovered = sum(v for _, v in eng.reg.counter(
+        "serve_stream_retries_total").labels_values())
+    dead_total = sum(v for _, v in eng.reg.counter(
+        "serve_dead_letter_total").labels_values())
+    if args.fault_plan or args.watchdog_iters or injected or recovered:
+        rec_h = eng.reg.histogram("serve_recovery_iters")
+        rec_p50 = (f", recovery p50 {rec_h.quantile(0.5):.0f} iters"
+                   if rec_h.count() else "")
+        print(f"faults: {injected:.0f} injected, {recovered:.0f} stream "
+              f"retries, {dead_total:.0f} dead-lettered{rec_p50}")
+    # per-stream terminal outcomes: operators see recovery results without
+    # scraping metrics — dead-letter/stuck always shown, retried streams too
+    for r in sorted(done, key=lambda r: r.id):
+        if r.status != "completed" or r.retries or r.preemptions:
+            detail = f"  request {r.id} [{r.status}]: " \
+                     f"{len(r.out_tokens)} tokens, {r.retries} retries, " \
+                     f"{r.preemptions} preemptions"
+            if r.error:
+                detail += f" — {r.error}"
+            print(detail)
+    if slack.messages:
+        print("alerts fired:")
+        for m in slack.messages:
+            print(f"  {m}")
 
 
 if __name__ == "__main__":

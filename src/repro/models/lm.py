@@ -104,7 +104,8 @@ class LM:
                    prefix_sharing: bool = True,
                    decode_impl: str = "gather",
                    mesh=None, kv_axis: str = "model",
-                   kv_dtype: str = "native"):
+                   kv_dtype: str = "native",
+                   locality_chips: Optional[int] = None):
         """Decode cache construction.
 
         ``backend=None`` (train / dry-run) returns the raw dense pytree —
@@ -126,7 +127,8 @@ class LM:
                               num_pages=num_pages,
                               prefix_sharing=prefix_sharing,
                               decode_impl=decode_impl, mesh=mesh,
-                              kv_axis=kv_axis, kv_dtype=kv_dtype)
+                              kv_axis=kv_axis, kv_dtype=kv_dtype,
+                              locality_chips=locality_chips)
         assert kv_dtype == "native", (
             "int8 KV pages are a managed paged-backend format "
             "(init_cache(backend='paged', kv_dtype='int8'))")

@@ -49,6 +49,20 @@ POOL_LOGICAL_AXES = ("layers", "kv_pages", None, None, None)
 SCALE_LOGICAL_AXES = POOL_LOGICAL_AXES[:4]
 
 
+def chip_of_page(pid: int, pages_per_chip: int) -> int:
+    """The chip owning global page id ``pid`` under the contiguous-range
+    P/n split (chip c owns ``[c*P/n, (c+1)*P/n)``).  Shared by the
+    allocator's per-chip free lists and the chip-failure drain path, so
+    page->chip routing can never disagree between alloc and recovery."""
+    return pid // pages_per_chip
+
+
+def chip_page_range(chip: int, pages_per_chip: int) -> range:
+    """The global page-id range chip ``chip`` owns (scratch page 0 included
+    when chip 0 — callers that mean *usable* pages must skip id 0)."""
+    return range(chip * pages_per_chip, (chip + 1) * pages_per_chip)
+
+
 def kv_pool_spec(mesh, pool_shape, rules=None,
                  axis: str = None) -> PartitionSpec:
     """PartitionSpec for a (L, P, page, KV, D) pool: ``kv_pages`` -> mesh.

@@ -1,7 +1,10 @@
-from repro.serve.engine import Request, SamplingParams, ServeEngine, \
-    sample_token
-from repro.serve.kvcache import (ContiguousCache, KVCache, MemoryStats,
-                                 PagedCache, contiguous_kv_bytes,
+from repro.serve.engine import (EngineStuckError, Request, SamplingParams,
+                                ServeEngine, sample_token)
+from repro.serve.faults import (FaultEvent, FaultPlan,
+                                TransientDispatchError)
+from repro.serve.kvcache import (CacheInvariantError, ContiguousCache,
+                                 KVCache, MemoryStats, PagedCache,
+                                 contiguous_kv_bytes,
                                  decode_transient_bytes, make_cache,
                                  page_kv_bytes)
 from repro.serve.sampling import filtered_probs, sample_batch
@@ -10,6 +13,8 @@ from repro.serve.tenancy import (BATCH, INTERACTIVE, PriorityClass,
                                  next_victim)
 
 __all__ = ["Request", "SamplingParams", "ServeEngine", "sample_token",
+           "EngineStuckError", "FaultEvent", "FaultPlan",
+           "TransientDispatchError", "CacheInvariantError",
            "filtered_probs", "sample_batch", "KVCache", "ContiguousCache",
            "PagedCache", "MemoryStats", "make_cache", "contiguous_kv_bytes",
            "decode_transient_bytes", "page_kv_bytes", "PriorityClass",

@@ -78,6 +78,26 @@ regime of Figs 5/6/8.  Design:
   freed slot's page-table row points at physical page 0), so a freed slot
   can never deposit stale-position K/V into pages that have since been
   reallocated to another request.
+* **Fault tolerance** (``repro.serve.faults``): a seedable ``FaultPlan``
+  injects faults at named seams — non-finite logits inside the fused
+  dispatch, poisoned KV pages, a failed chip of the sharded pool, stalled
+  prefill chunks, transient dispatch exceptions.  Detection is in-band
+  and cheap: the fused step's non-finite guard maps a bad logit row to a
+  ``-1`` token sentinel riding the existing single (B,) host transfer, a
+  per-stream progress watchdog (``watchdog_iters``) catches wedged slots,
+  and ``PagedCache.verify()`` re-checks the allocator invariants every
+  iteration in debug mode (``verify_cache=True``).  Recovery reuses the
+  preemption machinery so it stays **bitwise**: the suspect slot's pages
+  are dropped from the prefix registry (corrupt content must never
+  re-share) and evicted, and the request re-queues for
+  recompute-on-resume prefill with its sampling step indices intact —
+  greedy AND seeded streams continue bit-identically — under bounded
+  retries with exponential backoff.  A stream out of retries (or whose
+  footprint can never fit again after a chip loss) dead-letters:
+  ``status="dead_letter"`` with the error on the ``Request``, neighbours
+  untouched.  Chip failure (``PagedCache.fail_chip``) drains the lost
+  chip's free pages so capacity degrades from P to P·(n-1)/n and only
+  the streams actually holding pages there are recovered.
 
 Finished slots (EOS or max_len) free their cache reservation and are
 refilled from the queue — the 'continuous batching' part.  Dispatch and
@@ -100,6 +120,7 @@ import numpy as np
 
 from repro.models import ForwardOpts, LM
 from repro.core.telemetry import MetricsRegistry
+from repro.serve.faults import FaultEvent, FaultPlan, TransientDispatchError
 from repro.serve.sampling import sample_batch
 from repro.serve.tenancy import TenancyConfig, Victim, next_victim
 
@@ -138,7 +159,21 @@ class Request:
     tenant: str = "default"          # tenancy key (ignored without tenancy=)
     preemptions: int = 0             # times this request lost its slot
     last_token_at: Optional[float] = None     # for inter-token latency
+    retries: int = 0                 # fault/watchdog recoveries consumed
+    error: Optional[str] = None      # dead-letter / stuck diagnostic
+    status: str = "pending"          # terminal: completed|dead_letter|stuck
     _seq: int = 0                    # submit order — the FIFO tiebreak
+    _resume_after: int = 0           # recovery backoff: earliest readmit iter
+
+
+class EngineStuckError(RuntimeError):
+    """``run_until_drained`` exhausted ``max_iters`` with work still in
+    flight.  ``.stuck`` holds the wedged requests, each flagged
+    ``status="stuck"`` with the diagnostic on ``Request.error``."""
+
+    def __init__(self, message: str, stuck: List["Request"]):
+        super().__init__(message)
+        self.stuck = stuck
 
 
 def _filtered_probs_np(logits: np.ndarray, params: SamplingParams) -> np.ndarray:
@@ -185,7 +220,12 @@ class ServeEngine:
                  mesh=None, kv_axis: str = "model",
                  prefill_chunk: int = 0, prefill_budget: int = 0,
                  kv_dtype: str = "native",
-                 tenancy: Optional[TenancyConfig] = None):
+                 tenancy: Optional[TenancyConfig] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 watchdog_iters: int = 0, max_retries: int = 3,
+                 verify_cache: bool = False, alerts=None,
+                 health_every: int = 16,
+                 locality_chips: Optional[int] = None):
         # per-slot positions rely on masked-then-overwritten cache writes,
         # which holds for attention KV caches but not recurrent state
         assert lm.cfg.family in ("dense", "moe", "vlm"), (
@@ -207,7 +247,31 @@ class ServeEngine:
                                 num_pages=num_pages,
                                 prefix_sharing=prefix_sharing,
                                 decode_impl=decode_impl, mesh=mesh,
-                                kv_axis=kv_axis, kv_dtype=kv_dtype)
+                                kv_axis=kv_axis, kv_dtype=kv_dtype,
+                                locality_chips=locality_chips)
+        # fault injection + detection + recovery (repro.serve.faults): the
+        # plan is polled once per step; all detection state is host-side
+        self.fault_plan = fault_plan
+        self.watchdog_iters = int(watchdog_iters)
+        self.max_retries = int(max_retries)
+        self.verify_cache = bool(verify_cache)
+        self.alerts = alerts
+        self.health_every = int(health_every)
+        if fault_plan is not None and type(self.kv).backend != "paged":
+            bad = ({e.kind for e in fault_plan.events}
+                   & {"poison_page", "chip_failure", "stall_chunk"})
+            if bad:
+                raise ValueError(
+                    f"fault kinds {sorted(bad)} target the paged allocator "
+                    "(physical pages / chips / chunked grants); use "
+                    "cache_backend='paged'")
+        self._iter = 0                      # step() clock (faults, watchdog)
+        self._pending_faults: List[FaultEvent] = []  # carried until firable
+        self._poison_slots: set = set()     # nan_logits victims this step
+        self._stall_until: Dict[int, int] = {}   # slot -> stall expiry iter
+        self._dispatch_fail_left = 0        # queued transient dispatch raises
+        self._last_progress: Dict[int, int] = {}  # slot -> last progress it.
+        self._quarantined: Dict[int, int] = {}    # req.id -> recovery start
         # chunked prefill: C-token chunks interleaved with decode, at most
         # `budget` prefill tokens per engine iteration (0 = whole-prompt)
         self.chunk = int(prefill_chunk)
@@ -290,7 +354,7 @@ class ServeEngine:
         # place instead of double-buffering it per dispatch (live HBM stays
         # ~bytes_total, not 2x).  The page table is a separate, NON-donated
         # input: its device copy is cached across steps by PagedCache.
-        self._fused = jax.jit(self._make_fused(), static_argnums=(11,),
+        self._fused = jax.jit(self._make_fused(), static_argnums=(12,),
                               donate_argnums=(2,))
         self._prefill = jax.jit(self._make_prefill(), donate_argnums=(3,))
         if self.chunk:
@@ -361,6 +425,20 @@ class ServeEngine:
           "footprint pages charged to each tenant ('tenant' label)")
         g("serve_tenant_quota_pages",
           "configured per-tenant page quota ('tenant' label)")
+        c("serve_faults_injected_total",
+          "injected faults that fired, by seam ('kind' label)")
+        c("serve_stream_retries_total",
+          "stream recoveries (quarantine + evict + re-queue) and transient "
+          "dispatch retries, by detection ('reason' label)")
+        c("serve_dead_letter_total",
+          "requests terminally failed: recovery retries exhausted or "
+          "footprint unfittable after a chip loss ('reason' label)")
+        h("serve_recovery_iters",
+          "engine iterations from a stream's quarantine to its next "
+          "emitted token",
+          buckets=(1, 2, 4, 8, 16, 32, 64, float("inf")))
+        g("serve_streams_quarantined",
+          "streams currently re-queued by fault recovery (awaiting resume)")
 
     # ---------------------------------------------------------- jit builds ----
     def _make_fused(self):
@@ -376,7 +454,7 @@ class ServeEngine:
         mesh, kv_axis = self.kv.mesh, self.kv.kv_axis
 
         def fused(params, tokens, layers, page_table, positions, active,
-                  temps, top_ks, top_ps, seeds, steps, all_greedy):
+                  temps, top_ks, top_ps, seeds, steps, poison, all_greedy):
             cache = {"layers": layers}
             if page_table is not None:
                 cache["page_table"] = page_table
@@ -384,10 +462,18 @@ class ServeEngine:
                                            decode_impl=decode_impl,
                                            mesh=mesh, kv_axis=kv_axis)
             rows = logits[:, -1, :vocab].astype(jnp.float32)
+            # nan_logits fault seam: a traced (B,) mask NaNs the victim's
+            # row *inside* the dispatch, so detection exercises the real
+            # guard (all-False on healthy iterations — same trace)
+            rows = jnp.where(poison[:, None], jnp.nan, rows)
             if all_greedy:
                 tok = jnp.argmax(rows, axis=-1).astype(jnp.int32)
             else:
                 tok = sample_batch(rows, temps, top_ks, top_ps, seeds, steps)
+            # non-finite guard: a row with any NaN/Inf yields the -1
+            # sentinel in place of a token id — detection rides the
+            # existing single (B,) host transfer instead of adding one
+            tok = jnp.where(jnp.isfinite(rows).all(axis=-1), tok, -1)
             return jnp.where(active, tok, 0), cache["layers"]
 
         return fused
@@ -420,6 +506,8 @@ class ServeEngine:
             n = tokens.shape[0]
             rows = logits[jnp.arange(n), last_idx, :vocab].astype(jnp.float32)
             toks = sample_batch(rows, temps, top_ks, top_ps, seeds, steps)
+            # same non-finite sentinel as the fused dispatch
+            toks = jnp.where(jnp.isfinite(rows).all(axis=-1), toks, -1)
             return toks, layers
 
         return run
@@ -441,6 +529,8 @@ class ServeEngine:
                                              start_pos, dest, last_pos)
             rows = logits[:, -1, :vocab].astype(jnp.float32)
             toks = sample_batch(rows, temps, top_ks, top_ps, seeds, steps)
+            # the chunk attends prior pages: a poisoned page surfaces here
+            toks = jnp.where(jnp.isfinite(rows).all(axis=-1), toks, -1)
             return toks, cache["layers"]
 
         return run
@@ -487,8 +577,10 @@ class ServeEngine:
         stable by ``_seq``) — plain FIFO, bit-identical to the untenanted
         engine.  A request preempted *during* the current admission pass
         re-enters ``self.queue`` but not this snapshot, so one pass can
-        never preempt-and-readmit the same request."""
-        return sorted(self.queue, key=lambda r: (-self._prio(r), r._seq))
+        never preempt-and-readmit the same request.  A recovering request
+        stays invisible until its ``_resume_after`` backoff horizon."""
+        ready = [r for r in self.queue if r._resume_after <= self._iter]
+        return sorted(ready, key=lambda r: (-self._prio(r), r._seq))
 
     def _prefill_tokens(self, req: Request) -> np.ndarray:
         """What prefill must land for this request: the prompt — plus, for
@@ -553,6 +645,157 @@ class ServeEngine:
         exist."""
         return min(self.img_len + len(req.prompt) + req.max_new_tokens,
                    self.S)
+
+    # ----------------------------------------------------- fault recovery ----
+    def _apply_faults(self) -> None:
+        """Fire every pending fault whose preconditions hold; the rest
+        carry to the next iteration (a plan never silently drops a fault
+        it could eventually fire)."""
+        self._pending_faults = [
+            e for e in self._pending_faults if not self._fire(e)]
+
+    def _victim_slot(self, want: Optional[int]) -> Optional[int]:
+        """Deterministic victim resolution: the requested slot if it is
+        live and decodable, else the lowest active decoding slot."""
+        slots = [i for i in range(self.B)
+                 if self.active[i] and i not in self.prefilling]
+        if want is not None:
+            return want if want in slots else None
+        return slots[0] if slots else None
+
+    def _fire(self, e: FaultEvent) -> bool:
+        """Apply one fault event; returns ``False`` to carry it forward."""
+        if e.kind == "dispatch_error":
+            self._dispatch_fail_left += e.duration
+        elif e.kind == "nan_logits":
+            slot = self._victim_slot(e.slot)
+            if slot is None:
+                return False
+            self._poison_slots.add(slot)
+        elif e.kind == "poison_page":
+            pid = e.page
+            if pid is None:
+                slot = self._victim_slot(e.slot)
+                if slot is None or self.slot_pos[slot] <= 0:
+                    return False
+                # the page backing the victim's most recent position: read
+                # by its very next decode step, so detection is immediate
+                pid = int(self.kv.page_table[
+                    slot, (int(self.slot_pos[slot]) - 1) // self.kv.page])
+            if pid <= 0:
+                return False
+            self.kv.poison_page(pid)
+        elif e.kind == "stall_chunk":
+            if not self.chunk:
+                return True         # impossible by config: never fires
+            slots = sorted(self.prefilling)
+            if e.slot is not None:
+                slots = [s for s in slots if s == e.slot]
+            if not slots:
+                return False
+            self._stall_until[slots[0]] = self._iter + e.duration
+        else:
+            assert e.kind == "chip_failure", e.kind
+            chip = e.chip if e.chip is not None \
+                else getattr(self.kv, "chips", 1) - 1
+            for s in self.kv.fail_chip(chip):
+                self._recover(s, "chip_failure")
+            # queued requests whose footprint can no longer ever fit the
+            # degraded pool would defer forever: dead-letter them now
+            for r in [r for r in self.queue
+                      if not self.kv.can_ever_fit(self._footprint(r))]:
+                self.queue.remove(r)
+                self._dead_letter(r, "capacity_lost")
+        self.reg.counter("serve_faults_injected_total").inc(
+            1, {"kind": e.kind})
+        return True
+
+    def _recover(self, slot: int, reason: str) -> None:
+        """Quarantine ``slot``'s stream and re-queue it for bitwise
+        recompute-on-resume — the preemption path under a retry budget.
+        The slot's pages are dropped from the prefix registry first
+        (suspect content must never re-share into a resume prefill), then
+        evicted; the request re-enters the queue keeping its ``_seq``,
+        gated by an exponential-backoff resume horizon.  Out of retries —
+        or with a footprint the post-chip-failure pool can never hold
+        again — the request dead-letters instead of looping."""
+        req = self.slot_req[slot]
+        self.prefilling.pop(slot, None)
+        if type(self.kv).backend == "paged":
+            self.kv.unregister_pages(list(self.kv._slot_pages[slot]))
+            self.kv.evict(slot)
+        else:
+            self.kv.free(slot)
+        self.slot_req[slot] = None
+        self.active[slot] = False
+        self.slot_pos[slot] = 0
+        self.next_token[slot] = 0
+        self._stall_until.pop(slot, None)
+        self._last_progress.pop(slot, None)
+        req.retries += 1
+        self.reg.counter("serve_stream_retries_total").inc(
+            1, {"reason": reason})
+        if req.retries > self.max_retries:
+            self._dead_letter(req, reason)
+        elif not self.kv.can_ever_fit(self._footprint(req)):
+            self._dead_letter(req, "capacity_lost")
+        else:
+            # keep the original quarantine iteration across re-faults so
+            # serve_recovery_iters measures fault-to-resumption end to end
+            self._quarantined.setdefault(req.id, self._iter)
+            req._resume_after = self._iter + (1 << (req.retries - 1))
+            self.queue.append(req)   # keeps _seq: resumes ahead of peers
+            self.reg.gauge("serve_streams_quarantined").set(
+                len(self._quarantined))
+        self._export_memory()
+
+    def _dead_letter(self, req: Request, reason: str) -> None:
+        """Terminal failure: surface the error on the request and finish
+        it un-served (``status="dead_letter"``).  Neighbour streams are
+        untouched — the slot and pages were already released."""
+        req.status = "dead_letter"
+        req.error = (f"dead-lettered after {req.retries} recoveries "
+                     f"(reason: {reason})")
+        req.done_at = time.perf_counter()
+        self._quarantined.pop(req.id, None)
+        self.reg.gauge("serve_streams_quarantined").set(
+            len(self._quarantined))
+        self.reg.counter("serve_dead_letter_total").inc(1, {"reason": reason})
+        self.finished.append(req)
+
+    def _watchdog(self) -> None:
+        """Recover every live slot that made no progress — no token
+        emitted, no chunk landed, no admission — for ``watchdog_iters``
+        engine iterations (a stalled allocator grant, a need stranded by a
+        chip failure, or any future wedge)."""
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            last = self._last_progress.get(slot, self._iter)
+            if self._iter - last >= self.watchdog_iters:
+                self._recover(slot, "watchdog")
+
+    def _dispatch_fused(self, *args):
+        """The fused dispatch behind the transient-fault retry loop.  An
+        injected :class:`TransientDispatchError` raises *before* the real
+        call, so the donated buffers are untouched and the retry is
+        idempotent; ``max_retries`` consecutive failures re-raise — a
+        permanently dead dispatch path is engine-fatal, not per-stream."""
+        attempt = 0
+        while True:
+            try:
+                if self._dispatch_fail_left > 0:
+                    self._dispatch_fail_left -= 1
+                    raise TransientDispatchError(
+                        f"injected dispatch failure (iteration {self._iter})")
+                return self._fused(*args)
+            except TransientDispatchError:
+                attempt += 1
+                self.reg.counter("serve_stream_retries_total").inc(
+                    1, {"reason": "dispatch_error"})
+                if attempt > self.max_retries:
+                    raise
+                time.sleep(min(0.001 * (1 << (attempt - 1)), 0.05))
 
     # ------------------------------------------------------------ prefill ----
     def _admit(self):
@@ -654,6 +897,7 @@ class ServeEngine:
                     self.kv.set_decode_shield(slot, True)
                     self.prefilling[slot] = _PrefillState(
                         req=req, shared=shared, tokens=toks)
+                    self._last_progress[slot] = self._iter
                     admitted = True
                     break
                 if getattr(self.kv, "last_deny", None) == "quota":
@@ -708,6 +952,13 @@ class ServeEngine:
             while (budget >= self.chunk and st.done < plen
                    and (cap is None
                         or cls_spent.get(cname, 0) + self.chunk <= cap)):
+                if self._iter < self._stall_until.get(slot, 0):
+                    # injected stall_chunk fault: behaves exactly like a
+                    # banker-unsafe grant until the stall expires
+                    self.reg.counter(
+                        "serve_prefill_chunk_stalls_total").inc()
+                    stalled.add(slot)
+                    break
                 end = min(st.done + self.chunk, plen)
                 final = end == plen
                 cover = self._footprint(req) if final else end
@@ -734,7 +985,6 @@ class ServeEngine:
                     jnp.asarray([sp.seed], jnp.int32),
                     jnp.asarray([len(req.out_tokens)], jnp.int32))
                 self.kv.update({**self.kv.state, "layers": new_layers})
-                self.kv.register_landed(slot, ptoks, end)
                 self.reg.counter("serve_prefill_chunks_total").inc()
                 self.reg.counter("serve_prefill_dispatches_total").inc()
                 self.reg.counter("serve_prefill_tokens_total").inc(
@@ -742,13 +992,22 @@ class ServeEngine:
                 budget -= self.chunk
                 spent += self.chunk
                 cls_spent[cname] = cls_spent.get(cname, 0) + self.chunk
+                tok0 = int(np.asarray(toks)[0])
+                if tok0 == -1:
+                    # the chunk attended non-finite content (a poisoned
+                    # page): quarantine before the landed pages can enter
+                    # the prefix registry and re-share the corruption
+                    self._recover(slot, "nonfinite_logits")
+                    break
+                self.kv.register_landed(slot, ptoks, end)
                 landed += end - st.done
                 st.done = end
+                self._last_progress[slot] = self._iter
                 if final:
                     del self.prefilling[slot]
                     self.kv.set_decode_shield(slot, False)
                     self.slot_pos[slot] = self.img_len + plen
-                    self.next_token[slot] = int(np.asarray(toks)[0])
+                    self.next_token[slot] = tok0
                     self.active[slot] = True
                     self.temps[slot] = sp.temperature
                     self.top_ks[slot] = sp.top_k
@@ -814,13 +1073,43 @@ class ServeEngine:
             self.top_ks[slot] = sp.top_k
             self.top_ps[slot] = sp.top_p
             self.seeds[slot] = sp.seed
+            self._last_progress[slot] = self._iter
             self.reg.counter("serve_prefill_tokens_total").inc(len(ptoks))
         self.reg.counter("serve_prefill_dispatches_total").inc()
         # buckets fixed by the eager _declare_metrics registration
         self.reg.histogram("serve_prefill_batch_size").observe(n)
+        for j, (slot, _, _, _, _) in enumerate(group):
+            if int(toks[j]) == -1:
+                # non-finite logits out of the prefill forward itself:
+                # quarantine this slot before it can decode
+                self._recover(slot, "nonfinite_logits")
 
     # ------------------------------------------------------------- decode ----
-    def step(self):
+    def step(self) -> bool:
+        """One engine iteration (``_step``), wrapped with the fault clock:
+        scheduled faults fire first (events whose preconditions are not
+        met yet carry forward), the watchdog then recovers any stream that
+        made no progress for ``watchdog_iters`` iterations, debug mode
+        re-verifies the allocator invariants, and — when an
+        ``AlertManager`` is wired in — the serve-path light health checks
+        and alert rules run every ``health_every`` iterations."""
+        if self.fault_plan is not None:
+            self._pending_faults.extend(self.fault_plan.events_at(self._iter))
+            if self._pending_faults:
+                self._apply_faults()
+        live = self._step()
+        if self.watchdog_iters:
+            self._watchdog()
+        if self.verify_cache and hasattr(self.kv, "verify"):
+            self.kv.verify()
+        if self.alerts is not None and self._iter % self.health_every == 0:
+            from repro.core.health import serve_light_checks
+            serve_light_checks(self)
+            self.alerts.evaluate()
+        self._iter += 1
+        return live
+
+    def _step(self):
         """One engine iteration: admit (+ up to one budget's worth of
         prefill chunks), then **one** fused decode+sample dispatch for all
         active slots at their own positions.
@@ -871,13 +1160,17 @@ class ServeEngine:
                              np.minimum(self.slot_pos, self.S - 1), 0)
         all_greedy = bool(np.all(self.temps[self.active] <= 0.0))
         view = self.kv.decode_view()
-        sampled, new_layers = self._fused(
+        poison = np.zeros(self.B, bool)
+        if self._poison_slots:
+            poison[sorted(self._poison_slots)] = True
+            self._poison_slots.clear()
+        sampled, new_layers = self._dispatch_fused(
             self.params, jnp.asarray(self.next_token[:, None]),
             view["layers"], view.get("page_table"),
             jnp.asarray(positions), jnp.asarray(self.active),
             jnp.asarray(self.temps), jnp.asarray(self.top_ks),
             jnp.asarray(self.top_ps), jnp.asarray(self.seeds),
-            jnp.asarray(steps), all_greedy)
+            jnp.asarray(steps), jnp.asarray(poison), all_greedy)
         self.kv.update({**view, "layers": new_layers})
         self.reg.counter("serve_decode_dispatches_total").inc()
         self.reg.counter("serve_iterations_total").inc()
@@ -901,11 +1194,19 @@ class ServeEngine:
                     now - req.last_token_at, {"class": self._class_name(req)})
             req.last_token_at = now
             self.slot_pos[i] += 1
+            self._last_progress[i] = self._iter
+            if req.id in self._quarantined:
+                # the recovered stream resumed emitting: recovery complete
+                self.reg.histogram("serve_recovery_iters").observe(
+                    self._iter - self._quarantined.pop(req.id))
+                self.reg.gauge("serve_streams_quarantined").set(
+                    len(self._quarantined))
             done = (len(req.out_tokens) >= req.max_new_tokens
                     or tok == req.eos_id
                     or self.slot_pos[i] >= self.S)
             if done:
                 req.done_at = now
+                req.status = "completed"
                 self.reg.counter("serve_tokens_total").inc(
                     len(req.out_tokens))
                 self.reg.histogram("serve_latency_seconds").observe(
@@ -915,6 +1216,13 @@ class ServeEngine:
                 self.active[i] = False
                 self.kv.free(i)
                 freed = True
+            elif int(sampled[i]) == -1:
+                # the non-finite guard tripped on THIS step's logits
+                # (injected NaN or a poisoned page read).  The pending
+                # token just emitted came from last step's clean logits;
+                # the corrupt sample is discarded and re-drawn at the same
+                # stream step by the resume prefill — bitwise either way.
+                self._recover(i, "nonfinite_logits")
             else:
                 self.next_token[i] = sampled[i]
         if freed:
@@ -953,8 +1261,42 @@ class ServeEngine:
             saved = dense_total - st.bytes_total
         self.reg.gauge("serve_kv_quant_bytes_saved").set(saved)
 
-    def run_until_drained(self, max_iters: int = 10_000) -> List[Request]:
+    def run_until_drained(self, max_iters: int = 10_000,
+                          on_stuck: str = "raise") -> List[Request]:
+        """Step until every submitted request reaches a terminal state
+        (completed or dead-lettered).
+
+        Exhausting ``max_iters`` with work still in flight no longer
+        returns silently: every surviving request is flagged
+        ``status="stuck"`` with its diagnostic on ``Request.error``, and
+        ``on_stuck="raise"`` (default) raises :class:`EngineStuckError`
+        naming the wedged slots and their last-progress iteration, while
+        ``on_stuck="status"`` returns the survivors appended to
+        ``finished`` so drivers can report per-stream outcomes."""
+        assert on_stuck in ("raise", "status"), on_stuck
         for _ in range(max_iters):
             if not self.step() and not self.queue:
-                break
-        return self.finished
+                return self.finished
+        if not self.queue and all(r is None for r in self.slot_req):
+            return self.finished
+        stuck: List[Request] = []
+        what: List[str] = []
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            last = self._last_progress.get(slot)
+            lp = f"iteration {last}" if last is not None else "never"
+            stuck.append(req)
+            what.append(f"request {req.id} wedged in slot {slot} "
+                        f"(last progress: {lp})")
+        for req in self.queue:
+            stuck.append(req)
+            what.append(f"request {req.id} still queued")
+        for req, w in zip(stuck, what):
+            req.status = "stuck"
+            req.error = f"undrained after {max_iters} iterations ({w})"
+        if on_stuck == "status":
+            return self.finished + stuck
+        raise EngineStuckError(
+            f"engine not drained after {max_iters} iterations: "
+            + "; ".join(what), stuck)

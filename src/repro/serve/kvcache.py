@@ -117,6 +117,13 @@ def decode_transient_bytes(cfg, batch: int, max_pages: int, page_size: int,
     return 2 * page_size * hd * itemsize + 4 * g * (hd + 2)
 
 
+class CacheInvariantError(AssertionError):
+    """Raised by ``PagedCache.verify`` when the allocator's host-side
+    bookkeeping violates an invariant — the detection signal for silent
+    state corruption (vs the fused dispatch's non-finite guard, which
+    detects *content* corruption)."""
+
+
 @dataclass
 class MemoryStats:
     backend: str
@@ -125,13 +132,14 @@ class MemoryStats:
     slots_total: int
     slots_in_use: int
     page_size: int = 0        # paged only
-    pages_total: int = 0      # usable pages (excludes the scratch page)
+    pages_total: int = 0      # usable pages (excludes scratch + failed chips)
     pages_in_use: int = 0
     pages_shared: int = 0     # pages with refcount > 1 (prefix sharing)
     mesh_chips: int = 1       # devices the pool is kv_pages-sharded over
     bytes_per_chip: int = 0   # pinned bytes each chip holds (= total / chips)
     kv_dtype: str = "native"  # page element format ("native" / "int8")
     bytes_scales: int = 0     # portion of bytes_total pinned by int8 scales
+    chips_failed: int = 0     # chips drained by fail_chip (degraded pool)
     # footprint pages charged per tenant (multi-tenant serving; empty when
     # requests carry no tenant tag)
     tenant_pages: Dict[str, int] = field(default_factory=dict)
@@ -396,14 +404,29 @@ class PagedCache:
         #: "pool" (banker/exhaustion — engine defers, in-order) or "quota"
         #: (tenant cap — engine skips this request and admits others)
         self.last_deny: Optional[str] = None
+        #: chips drained by ``fail_chip`` — their page-id ranges are dead:
+        #: never listed free again, capacity permanently reduced
+        self._failed_chips: set = set()
 
     # ------------------------------------------------------------ sizing ----
     def pages_needed(self, length: int) -> int:
         return -(-length // self.page)
 
+    def usable_pages(self) -> int:
+        """Pages the allocator can ever hand out: the pool minus scratch
+        minus every failed chip's range (the scratch page lives on chip 0,
+        so a failed chip 0 loses one page fewer than the others)."""
+        lost = sum(self.pages_per_chip - (1 if c == 0 else 0)
+                   for c in self._failed_chips)
+        return self.P - 1 - lost
+
     def can_ever_fit(self, length: int) -> bool:
         return (length <= self.S
-                and self.pages_needed(length) <= self.P - 1)
+                and self.pages_needed(length) <= self.usable_pages())
+
+    def _chip_of(self, pid: int) -> int:
+        from repro.parallel.pagedkv import chip_of_page
+        return chip_of_page(pid, self.pages_per_chip)
 
     # ------------------------------------------------------------- alloc ----
     def _free_count(self) -> int:
@@ -805,7 +828,11 @@ class PagedCache:
                 key = self._page_to_hash.pop(pid, None)
                 if key is not None:
                     del self._hash_to_page[key]
-                self._free_chip[pid // self.pages_per_chip].append(pid)
+                chip = self._chip_of(pid)
+                # a failed chip's pages are gone, not recyclable: the last
+                # reference dropping is when the page leaves the pool
+                if chip not in self._failed_chips:
+                    self._free_chip[chip].append(pid)
         self._slot_pages[slot] = []
         self._slot_shared[slot] = 0
         self._slot_need[slot] = 0
@@ -822,10 +849,147 @@ class PagedCache:
         self.page_table[slot, :] = 0    # point the freed slot at scratch
         self._page_table_dev = None
 
+    # ---------------------------------------------------- fault tolerance ----
+    def poison_page(self, pid: int) -> None:
+        """Overwrite physical page ``pid``'s content with non-finite values
+        (simulated in-HBM corruption — the ``poison_page`` fault seam).  On
+        a quantized pool the int8 payload has no NaN encoding, so the fp32
+        scales are poisoned instead; dequantization drags the NaN into the
+        attended values either way.  The page keeps its table/refcount
+        bookkeeping untouched: detecting the corruption is the *reader's*
+        job (the fused dispatch's non-finite logit guard), exactly as with
+        real bit rot."""
+        assert 0 < pid < self.P, (pid, self.P)
+        layers = dict(self.state["layers"])
+        names = ("k_scale", "v_scale") if self.quantized else ("k", "v")
+        for name in names:
+            layers[name] = layers[name].at[:, pid].set(jnp.nan)
+        self.state = {**self.state, "layers": layers}
+
+    def unregister_pages(self, pages: List[int]) -> None:
+        """Drop the prefix-sharing keys of ``pages`` (content lost or
+        suspect).  Existing sharers keep their references — they are
+        detected and recovered through the same guard — but no *new*
+        request can map the pages again, so a poisoned prompt page cannot
+        re-share into a recompute-on-resume prefill and re-poison the
+        stream forever."""
+        for pid in pages:
+            key = self._page_to_hash.pop(pid, None)
+            if key is not None:
+                del self._hash_to_page[key]
+
+    def fail_chip(self, chip: int) -> List[int]:
+        """Drain chip ``chip`` from the pool (a lost accelerator): its free
+        pages leave the free lists for good — capacity degrades from P to
+        P·(n-1)/n — and every slot holding a page in the chip's id range is
+        returned as a victim for the engine to recover (evict + recompute-
+        on-resume; streams with no pages there are untouched).  The chip's
+        prefix-hash keys are dropped so no later admission can share
+        content that no longer exists.  Idempotent per chip.
+
+        Note the pool can be left banker-*unsafe* for in-flight chunked
+        prefills whose remaining need exceeded the surviving capacity:
+        such slots stall until the engine's watchdog recovers (or
+        dead-letters) them — the one case where a stall is no longer
+        guaranteed to resolve by completions alone."""
+        from repro.parallel.pagedkv import chip_page_range
+        assert 0 <= chip < self.chips, (chip, self.chips)
+        if chip in self._failed_chips:
+            return []
+        self._failed_chips.add(chip)
+        self._free_chip[chip] = []
+        span = chip_page_range(chip, self.pages_per_chip)
+        self.unregister_pages([p for p in span if p in self._page_to_hash])
+        return [s for s in range(self.B)
+                if any(span.start <= p < span.stop
+                       for p in self._slot_pages[s])]
+
+    def verify(self) -> None:
+        """Invariant sanitizer over the allocator's host-side bookkeeping
+        (the debug-mode health check behind ``ServeEngine(verify_cache=)``
+        and the property-test fuzzers).  O(P + B·M) numpy, no device sync.
+        Raises :class:`CacheInvariantError` naming the first violated
+        invariant: refcounts == live references, scratch page never handed
+        out, free/owned pages partition the (surviving) pool, per-chip
+        free-list membership, page-table rows mirroring ``_slot_pages``,
+        prefix-registry bijection, per-tenant quota accounting, and the
+        ``memory_stats`` byte math."""
+        from repro.parallel.pagedkv import chip_page_range
+
+        def check(cond, what):
+            if not cond:
+                raise CacheInvariantError(f"PagedCache.verify: {what}")
+
+        owned = [pid for pages in self._slot_pages for pid in pages]
+        free = [pid for chip in self._free_chip for pid in chip]
+        check(0 not in owned and 0 not in free and self._ref[0] == 0,
+              "scratch page 0 handed out, listed free, or refcounted")
+        counts = (np.bincount(owned, minlength=self.P) if owned
+                  else np.zeros(self.P, np.int64))
+        check((self._ref == counts).all(),
+              f"refcounts drifted from live references "
+              f"(ref={self._ref.tolist()} vs owned={sorted(owned)})")
+        check(len(free) == len(set(free)), "duplicate page in free lists")
+        check(set(free).isdisjoint(owned),
+              f"pages both free and owned: {set(free) & set(owned)}")
+        lost = {p for c in self._failed_chips
+                for p in chip_page_range(c, self.pages_per_chip)}
+        check(not lost & set(free), "failed-chip page still listed free")
+        check(not lost & set(owned), "failed-chip page still owned")
+        check(set(free) | set(owned) <= set(range(1, self.P)) - lost,
+              "page id outside the surviving pool")
+        for c, chip in enumerate(self._free_chip):
+            check(all(self._chip_of(pid) == c for pid in chip),
+                  f"page filed under wrong chip's free list ({c})")
+        for s in range(self.B):
+            pages = self._slot_pages[s]
+            row = self.page_table[s]
+            check(list(row[:len(pages)]) == pages,
+                  f"slot {s} page-table row != owned pages")
+            check((row[len(pages):] == 0).all(),
+                  f"slot {s} page-table tail not parked on scratch")
+            check(0 <= self._slot_shared[s] <= len(pages),
+                  f"slot {s} shared-page count out of range")
+            check(self._slot_need[s] >= 0,
+                  f"slot {s} negative chunked-prefill need")
+            check((self._slot_tenant[s] is None) ==
+                  (self._slot_charge[s] == 0),
+                  f"slot {s} tenant/charge mismatch")
+        check(len(self._hash_to_page) == len(self._page_to_hash),
+              "prefix registry maps differ in size")
+        for key, pid in self._hash_to_page.items():
+            check(self._page_to_hash.get(pid) == key,
+                  f"prefix registry maps disagree on page {pid}")
+            check(self._ref[pid] > 0,
+                  f"registered prefix page {pid} has no owner")
+        charges: Dict[str, int] = {}
+        for s in range(self.B):
+            t = self._slot_tenant[s]
+            if t is not None:
+                charges[t] = charges.get(t, 0) + self._slot_charge[s]
+        check(charges == self._tenant_pages,
+              f"tenant accounting drifted: {charges} "
+              f"vs {self._tenant_pages}")
+        st = self.memory_stats()
+        pb = page_kv_bytes(self.cfg, self.page, self.dtype, self.kv_dtype)
+        check(st.pages_total == self.usable_pages(),
+              "memory_stats pages_total != usable pool")
+        check(st.pages_in_use == st.pages_total - len(free),
+              "memory_stats pages_in_use != usable - free")
+        check(st.bytes_reserved == st.pages_in_use * pb
+              and st.bytes_total == self.P * pb,
+              "memory_stats byte math inconsistent")
+        if not self._failed_chips:
+            # grants maintain banker safety — but a chip failure may
+            # legitimately strand an in-flight chunked need (the watchdog's
+            # recovery case), so the check only applies to intact pools
+            check(self._safe(len(free), self._banker_items()),
+                  "pool not banker-safe (a live slot can never complete)")
+
     # ------------------------------------------------------------- stats ----
     def memory_stats(self) -> MemoryStats:
         pb = page_kv_bytes(self.cfg, self.page, self.dtype, self.kv_dtype)
-        usable = self.P - 1
+        usable = self.usable_pages()
         in_use = usable - self._free_count()
         sharded = self.chips if self.mesh is not None else 1
         scale_b = (self.P * self.page * 2 * self.cfg.num_layers
@@ -839,6 +1003,7 @@ class PagedCache:
             pages_shared=int((self._ref > 1).sum()),
             mesh_chips=sharded, bytes_per_chip=self.P * pb // sharded,
             kv_dtype=self.kv_dtype, bytes_scales=scale_b,
+            chips_failed=len(self._failed_chips),
             tenant_pages=dict(self._tenant_pages))
 
 
@@ -848,7 +1013,8 @@ def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
                backend: str = "contiguous", page_size: int = 16,
                num_pages: Optional[int] = None, prefix_sharing: bool = True,
                decode_impl: str = "gather", mesh=None,
-               kv_axis: str = "model", kv_dtype: str = "native"):
+               kv_axis: str = "model", kv_dtype: str = "native",
+               locality_chips: Optional[int] = None):
     """Build a KV-cache backend for ``lm`` (the ``lm.init_cache(backend=...)``
     entry point).  ``decode_impl`` ("gather" / "pallas") rides on the paged
     backend and tells decode consumers how to resolve the page table; the
@@ -856,8 +1022,15 @@ def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
     shards the paged pool P/n over ``kv_axis`` (``kv_pages`` logical axis)
     with a locality-aware free list.  ``kv_dtype="int8"`` (paged only)
     stores pages quantized with per-row fp32 scales — quantize-on-write,
-    dequantize-on-read in both decode impls."""
+    dequantize-on-read in both decode impls.  ``locality_chips`` (paged,
+    mesh-free) partitions the free list as an N-chip pool without device
+    sharding — the host-side harness for per-chip locality and
+    chip-failure drain tests."""
     if backend == "contiguous":
+        if locality_chips is not None:
+            raise ValueError(
+                "locality_chips partitions the paged backend's free list; "
+                "the contiguous layout has no pages (use backend='paged')")
         if decode_impl != "gather":
             raise ValueError(
                 "decode_impl applies to the paged backend's page-table "
@@ -883,5 +1056,6 @@ def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
                           page_size=page_size, num_pages=num_pages,
                           prefix_sharing=prefix_sharing,
                           decode_impl=decode_impl, mesh=mesh,
-                          kv_axis=kv_axis, kv_dtype=kv_dtype)
+                          kv_axis=kv_axis, kv_dtype=kv_dtype,
+                          locality_chips=locality_chips)
     raise ValueError(f"unknown KV-cache backend {backend!r}")

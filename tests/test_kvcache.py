@@ -330,6 +330,8 @@ def test_engine_soak_random_schedule_tight_pool_parity_and_telemetry():
                 assert st.bytes_reserved <= st.bytes_total
         assert not eng.queue and all(r is None for r in eng.slot_req), \
             "soak schedule must drain within the step budget"
+        if kw.get("cache_backend") == "paged":
+            eng.kv.verify()       # full sanitizer sweep on the drained pool
         return {r.id: r.out_tokens for r in eng.finished}, eng
 
     # 8 usable pages, footprints up to ceil((8+5)/4)=4 pages: 2-3 in flight

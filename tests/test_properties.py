@@ -198,6 +198,8 @@ def _check_invariants(kv):
     assert stats.bytes_per_chip * stats.mesh_chips == stats.bytes_total
     # shared accounting never exceeds what's owned
     assert stats.pages_shared <= len(set(owned))
+    # the cache's own sanitizer must agree with every check above
+    kv.verify()
 
 
 @given(ops=alloc_ops_st)

@@ -1,0 +1,384 @@
+"""Fault-tolerant serving: injection at every seam, watchdog/guard
+detection, and bitwise recompute-on-resume recovery.
+
+The correctness bar is the one the recovery design is built around: a
+recovered stream re-draws its discarded sample *at the same stream step*
+(the per-request sampling fold keys on ``len(out_tokens)``), so after any
+recoverable fault — non-finite logits out of the fused dispatch, a
+poisoned KV page, a stalled prefill chunk, a transient dispatch error, a
+whole failed chip — every stream that completes must be **bitwise
+identical** to the same workload on a fault-free engine, for greedy and
+seeded sampling alike, whole-prompt and chunked prefill alike.  Faults
+that cannot be recovered degrade predictably: bounded retries dead-letter
+the victim without perturbing its neighbours, and a wedged engine names
+its wedged slots instead of returning silently."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS
+from repro.models import LM
+from repro.serve import (CacheInvariantError, EngineStuckError, FaultEvent,
+                         FaultPlan, PriorityClass, Request, SamplingParams,
+                         ServeEngine, TenancyConfig, TenantSpec,
+                         TransientDispatchError)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = dataclasses.replace(CONFIGS["llama3.2-3b"].reduced(),
+                              dtype="float32", num_layers=2)
+    lm = LM(cfg)
+    return cfg, lm, lm.init(jax.random.key(0))
+
+
+def _requests(cfg, n=6, max_new=6, seed=0, tenant=None):
+    """Mixed sampling workload: even ids greedy, odd ids seeded top-p —
+    both must survive recovery bitwise."""
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(0, cfg.vocab_size,
+                                    6 + (i % 5)).astype(np.int32),
+                    max_new_tokens=max_new, tenant=tenant,
+                    sampling=SamplingParams(
+                        temperature=0.0 if i % 2 == 0 else 0.8, seed=i))
+            for i in range(n)]
+
+
+def _drain(eng, reqs, max_iters=2000):
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_drained(max_iters=max_iters)
+    return {r.id: tuple(r.out_tokens) for r in done}
+
+
+def _engine(lm, params, *, chunked=False, **kw):
+    kw.setdefault("num_pages", 33)
+    if chunked:
+        kw.setdefault("prefill_chunk", 8)
+    return ServeEngine(lm, params, max_batch=4, max_seq=64,
+                       cache_backend="paged", page_size=4, **kw)
+
+
+# --------------------------------------------- bitwise resume parity ----
+
+@pytest.mark.parametrize("chunked", [False, True],
+                         ids=["whole_prompt", "chunked"])
+@pytest.mark.parametrize("kind", ["nan_logits", "poison_page"])
+def test_recovered_streams_bitwise_identical(model, kind, chunked):
+    """The tentpole assertion: inject a corruption fault mid-decode, let
+    detection (the in-dispatch non-finite guard) and recovery (evict +
+    re-queue + recompute-on-resume) run, and require every stream —
+    including the recovered victim — bitwise equal to a fault-free run,
+    across greedy and seeded sampling and both prefill modes."""
+    cfg, lm, params = model
+    base = _drain(_engine(lm, params, chunked=chunked), _requests(cfg))
+    plan = FaultPlan([FaultEvent(2, kind), FaultEvent(6, kind)])
+    eng = _engine(lm, params, chunked=chunked, fault_plan=plan,
+                  watchdog_iters=16, verify_cache=True)
+    out = _drain(eng, _requests(cfg))
+    assert out == base
+    assert eng.reg.counter("serve_faults_injected_total").get(
+        {"kind": kind}) == 2
+    assert eng.reg.counter("serve_stream_retries_total").get(
+        {"reason": "nonfinite_logits"}) >= 1
+    assert eng.reg.histogram("serve_recovery_iters").recent(10)
+    assert eng.reg.gauge("serve_streams_quarantined").get() == 0
+    eng.kv.verify()
+
+
+def test_recovery_bitwise_under_tenancy(model):
+    """Recovery composes with the multi-tenant scheduler: the re-queued
+    victim keeps its tenant, re-admits under quota/priority, and still
+    resumes bitwise."""
+    cfg, lm, params = model
+
+    def tenancy():
+        return TenancyConfig(
+            tenants=[TenantSpec("chat", "interactive"),
+                     TenantSpec("bulk", "batch", page_quota=20)],
+            classes={"interactive": PriorityClass("interactive", 100,
+                                                  preemptible=False),
+                     "batch": PriorityClass("batch", 0, preemptible=True)})
+
+    def reqs():
+        out = _requests(cfg)
+        for r in out:
+            r.tenant = "chat" if r.id % 2 else "bulk"
+        return out
+
+    base = _drain(_engine(lm, params, tenancy=tenancy()), reqs())
+    plan = FaultPlan([FaultEvent(2, "nan_logits"),
+                      FaultEvent(5, "poison_page")])
+    eng = _engine(lm, params, tenancy=tenancy(), fault_plan=plan,
+                  verify_cache=True)
+    assert _drain(eng, reqs()) == base
+    eng.kv.verify()
+
+
+def test_stalled_chunk_recovered_by_watchdog_bitwise(model):
+    """A prefill chunk stalled past the watchdog window (a stuck allocator
+    grant) is detected by the per-stream progress watchdog and recovered;
+    the resumed stream — and its untouched neighbours — stay bitwise."""
+    cfg, lm, params = model
+    base = _drain(_engine(lm, params, chunked=True), _requests(cfg))
+    plan = FaultPlan([FaultEvent(1, "stall_chunk", duration=50)])
+    eng = _engine(lm, params, chunked=True, fault_plan=plan,
+                  watchdog_iters=6, verify_cache=True)
+    assert _drain(eng, _requests(cfg)) == base
+    assert eng.reg.counter("serve_stream_retries_total").get(
+        {"reason": "watchdog"}) >= 1
+    assert eng.reg.counter("serve_prefill_chunk_stalls_total").get() >= 1
+
+
+def test_transient_dispatch_error_retried_bitwise(model):
+    """A transient dispatch failure raises *before* the fused call touches
+    its donated buffers, so the in-place retry is idempotent: the run
+    completes bitwise with only the retry counter showing the hiccup."""
+    cfg, lm, params = model
+    base = _drain(_engine(lm, params), _requests(cfg))
+    plan = FaultPlan([FaultEvent(3, "dispatch_error", duration=2)])
+    eng = _engine(lm, params, fault_plan=plan)
+    assert _drain(eng, _requests(cfg)) == base
+    assert eng.reg.counter("serve_stream_retries_total").get(
+        {"reason": "dispatch_error"}) == 2
+
+
+def test_persistent_dispatch_error_is_engine_fatal(model):
+    """``max_retries`` consecutive dispatch failures re-raise: a dead
+    dispatch path is an engine outage, not a per-stream fault."""
+    cfg, lm, params = model
+    plan = FaultPlan([FaultEvent(2, "dispatch_error", duration=10)])
+    eng = _engine(lm, params, fault_plan=plan, max_retries=2)
+    for r in _requests(cfg, n=2):
+        eng.submit(r)
+    with pytest.raises(TransientDispatchError):
+        eng.run_until_drained(max_iters=100)
+
+
+# ----------------------------------------------- bounded retries ----
+
+def test_retry_exhaustion_dead_letters_without_poisoning_neighbors(model):
+    """A persistent per-stream fault (nan_logits re-firing on the same
+    slot every time its victim resumes) exhausts the retry budget and
+    dead-letters that one request — with the error surfaced on it — while
+    its neighbour completes bitwise and the engine drains clean."""
+    cfg, lm, params = model
+
+    def reqs():
+        return _requests(cfg, n=2)
+
+    base = _drain(ServeEngine(lm, params, max_batch=2, max_seq=64,
+                              cache_backend="paged", page_size=4,
+                              num_pages=33), reqs())
+    plan = FaultPlan([FaultEvent(1, "nan_logits", slot=0),
+                      FaultEvent(3, "nan_logits", slot=0)])
+    eng = ServeEngine(lm, params, max_batch=2, max_seq=64,
+                      cache_backend="paged", page_size=4, num_pages=33,
+                      fault_plan=plan, max_retries=1, verify_cache=True)
+    for r in reqs():
+        eng.submit(r)
+    done = {r.id: r for r in eng.run_until_drained(max_iters=2000)}
+    assert done[0].status == "dead_letter"
+    assert done[0].retries == 2
+    assert "dead-lettered" in done[0].error
+    assert "nonfinite_logits" in done[0].error
+    assert done[1].status == "completed"
+    assert tuple(done[1].out_tokens) == base[1]
+    assert eng.reg.counter("serve_dead_letter_total").get(
+        {"reason": "nonfinite_logits"}) == 1
+    assert eng.reg.gauge("serve_streams_quarantined").get() == 0
+    eng.kv.verify()
+
+
+# ------------------------------------------------- chip failure ----
+
+def test_chip_failure_drains_victims_and_resumes_bitwise(model):
+    """One chip of a 2-chip page pool fails mid-flight: capacity degrades
+    to the surviving chip's pages, only streams holding pages there are
+    recovered, and every completed stream matches the 2-chip clean run
+    bitwise."""
+    cfg, lm, params = model
+
+    def engine(**kw):
+        return ServeEngine(lm, params, max_batch=4, max_seq=64,
+                           cache_backend="paged", page_size=4,
+                           num_pages=24, locality_chips=2, **kw)
+
+    base = _drain(engine(), _requests(cfg, n=8))
+    plan = FaultPlan([FaultEvent(3, "chip_failure", chip=1)])
+    eng = engine(fault_plan=plan, watchdog_iters=16, verify_cache=True)
+    for r in _requests(cfg, n=8):
+        eng.submit(r)
+    done = eng.run_until_drained(max_iters=2000)
+    victims = eng.reg.counter("serve_stream_retries_total").get(
+        {"reason": "chip_failure"})
+    assert victims >= 1
+    assert eng.reg.counter("serve_faults_injected_total").get(
+        {"kind": "chip_failure"}) == 1
+    for r in done:
+        if r.status == "completed":
+            assert tuple(r.out_tokens) == base[r.id]
+    # the surviving pool: chip 0's pages minus the scratch page
+    assert eng.kv.usable_pages() == eng.kv.pages_per_chip - 1
+    assert eng.kv.memory_stats().chips_failed == 1
+    eng.kv.verify()
+
+
+def test_chip_failure_dead_letters_unservable_footprints(model):
+    """After the failure, a queued request whose footprint can never fit
+    the degraded pool dead-letters immediately (reason ``capacity_lost``)
+    instead of deferring forever."""
+    cfg, lm, params = model
+    eng = ServeEngine(lm, params, max_batch=2, max_seq=64,
+                      cache_backend="paged", page_size=4, num_pages=12,
+                      locality_chips=2,
+                      fault_plan=FaultPlan([FaultEvent(2, "chip_failure",
+                                                       chip=1)]))
+    rng = np.random.default_rng(0)
+    # footprint ceil((14+10)/4) = 6 pages > the 5 that survive chip 0
+    big = Request(0, rng.integers(0, cfg.vocab_size, 14).astype(np.int32),
+                  max_new_tokens=10)
+    small = Request(1, rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                    max_new_tokens=4)
+    third = Request(2, rng.integers(0, cfg.vocab_size, 14).astype(np.int32),
+                    max_new_tokens=10)
+    for r in (small, big, third):
+        eng.submit(r)
+    done = {r.id: r for r in eng.run_until_drained(max_iters=2000)}
+    assert done[1].status == "completed"
+    dead = [r for r in done.values() if r.status == "dead_letter"]
+    assert dead and all("capacity_lost" in r.error for r in dead)
+    assert eng.reg.counter("serve_dead_letter_total").get(
+        {"reason": "capacity_lost"}) == len(dead)
+
+
+# ---------------------------------------------------- random soak ----
+
+def test_random_fault_soak_always_drains(model):
+    """~200-step soak under a seeded random plan firing every recoverable
+    kind, with requests trickling in mid-flight: the engine must drain,
+    every request must reach a terminal status, and the pool sanitizer
+    must come back clean."""
+    cfg, lm, params = model
+    rng = np.random.default_rng(11)
+    arrivals = {}
+    for i in range(16):
+        arrivals.setdefault(int(rng.integers(0, 60)), []).append(
+            Request(i, rng.integers(0, cfg.vocab_size,
+                                    int(rng.integers(2, 12))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(2, 7)),
+                    sampling=SamplingParams(
+                        temperature=0.0 if i % 2 == 0 else 0.8, seed=i)))
+    eng = _engine(lm, params, chunked=True,
+                  fault_plan=FaultPlan.random(10, 150, seed=3),
+                  watchdog_iters=16, max_retries=8, verify_cache=True)
+    it = 0
+    while it < 200 or eng.queue or any(r is not None for r in eng.slot_req):
+        for r in arrivals.get(it, []):
+            eng.submit(r)
+        eng.step()
+        it += 1
+        assert it < 1000, "fault soak did not drain"
+    assert len(eng.finished) == 16
+    assert all(r.status in ("completed", "dead_letter")
+               for r in eng.finished)
+    injected = sum(v for _, v in eng.reg.counter(
+        "serve_faults_injected_total").labels_values())
+    assert injected >= 1
+    assert eng.reg.gauge("serve_streams_quarantined").get() == 0
+    eng.kv.verify()
+
+
+# --------------------------------------------- stuck-stream surfacing ----
+
+def test_run_until_drained_raises_naming_wedged_slots(model):
+    """Exhausting ``max_iters`` with work in flight is an error, not a
+    silent return: the raise carries the wedged requests, each flagged
+    ``stuck`` with its slot and last-progress iteration."""
+    cfg, lm, params = model
+    eng = _engine(lm, params)
+    for r in _requests(cfg, n=2):
+        eng.submit(r)
+    with pytest.raises(EngineStuckError) as ei:
+        eng.run_until_drained(max_iters=2)
+    assert ei.value.stuck and all(r.status == "stuck"
+                                  for r in ei.value.stuck)
+    assert "slot" in ei.value.stuck[0].error
+    assert "iteration" in ei.value.stuck[0].error
+
+
+def test_run_until_drained_status_mode_returns_stuck_streams(model):
+    """``on_stuck="status"`` reports instead of raising: the return value
+    includes the wedged requests with their partial output intact."""
+    cfg, lm, params = model
+    eng = _engine(lm, params)
+    for r in _requests(cfg, n=2):
+        eng.submit(r)
+    done = eng.run_until_drained(max_iters=3, on_stuck="status")
+    stuck = [r for r in done if r.status == "stuck"]
+    assert stuck and all(r.error for r in stuck)
+
+
+# ----------------------------------------------- sanitizer + plan API ----
+
+def test_verify_detects_corrupted_bookkeeping(model):
+    """The sanitizer actually bites: hand-corrupt the allocator state and
+    ``verify()`` must raise ``CacheInvariantError`` naming the drift."""
+    cfg, lm, params = model
+    kv = lm.init_cache(2, 32, dtype=jnp.float32, backend="paged",
+                       page_size=4, num_pages=9)
+    prompt = np.arange(5, dtype=np.int32)
+    assert kv.alloc(0, 8, prefix=prompt) == 0
+    kv.verify()
+    kv._ref[kv._slot_pages[0][0]] += 1
+    with pytest.raises(CacheInvariantError, match="refcounts"):
+        kv.verify()
+
+
+def test_fault_plan_parse_round_trip():
+    plan = FaultPlan.parse("nan_logits@5,poison_page@9:slot=2,"
+                           "chip_failure@12:chip=1,"
+                           "stall_chunk@3:slot=0:dur=8,"
+                           "dispatch_error@7:dur=2")
+    assert [(e.kind, e.iteration) for e in plan.events] == [
+        ("stall_chunk", 3), ("nan_logits", 5), ("dispatch_error", 7),
+        ("poison_page", 9), ("chip_failure", 12)]
+    assert plan.events_at(3)[0].duration == 8
+    assert plan.events_at(9)[0].slot == 2
+    assert plan.events_at(12)[0].chip == 1
+    for bad in ("typo_kind@3", "nan_logits", "nan_logits@2:bogus=1"):
+        with pytest.raises(ValueError):
+            FaultPlan.parse(bad)
+    with pytest.raises(ValueError):
+        FaultEvent(-1, "nan_logits")
+    with pytest.raises(ValueError):
+        FaultEvent(1, "nan_logits", duration=0)
+
+
+def test_paged_only_fault_kinds_rejected_on_contiguous(model):
+    """Plans with page/chip-level kinds cannot target the contiguous
+    backend — rejected at construction, not at fire time."""
+    cfg, lm, params = model
+    plan = FaultPlan([FaultEvent(1, "poison_page")])
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(lm, params, max_batch=2, max_seq=64,
+                    cache_backend="contiguous", fault_plan=plan)
+
+
+def test_nan_guard_recovers_on_contiguous_backend(model):
+    """The dispatch guard and recompute-on-resume don't depend on paging:
+    nan_logits recovery holds bitwise on the contiguous backend too."""
+    cfg, lm, params = model
+
+    def engine(**kw):
+        return ServeEngine(lm, params, max_batch=4, max_seq=64,
+                           cache_backend="contiguous", **kw)
+
+    base = _drain(engine(), _requests(cfg))
+    eng = engine(fault_plan=FaultPlan([FaultEvent(2, "nan_logits")]))
+    assert _drain(eng, _requests(cfg)) == base
+    assert eng.reg.counter("serve_stream_retries_total").get(
+        {"reason": "nonfinite_logits"}) >= 1
