@@ -49,8 +49,12 @@ bench-decode:
 
 # sharded paged serving sweep on 8 fake host devices: the kv_pages-
 # partitioned pool at mesh 1/2/4/8 — per-chip pinned KV bytes (P/n pages,
-# analytic == measured), fused-step latency vs the 1-chip baseline, and a
-# token-stream parity assert; JSON lands in benchmarks/out/sharded_serving.json
+# analytic == measured), fused-step latency vs the 1-chip baseline,
+# token-stream parity asserts (whole-prompt AND chunked through the
+# unified write/attend primitive), and the compiled prefill write
+# transient (shard_map local scatter vs the GSPMD baseline — asserted
+# block-sized, not O(P) replicated); JSON lands in
+# benchmarks/out/sharded_serving.json plus a dated BENCH_serving.json row
 bench-sharded:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src:. \
 	$(PY) -c "from benchmarks import bench_serving; \

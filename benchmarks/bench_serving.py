@@ -29,7 +29,8 @@ from repro.models import LM
 from repro.serve import (FaultEvent, FaultPlan, PriorityClass, Request,
                          SamplingParams, ServeEngine, TenancyConfig,
                          TenantSpec, contiguous_kv_bytes,
-                         decode_transient_bytes, make_cache, page_kv_bytes)
+                         decode_transient_bytes, make_cache, page_kv_bytes,
+                         prefill_transient_bytes)
 from repro.serve.engine import sample_token
 
 OUT_JSON = Path(__file__).resolve().parent / "out" / "decode_transient.json"
@@ -350,6 +351,16 @@ def run_sharded():
     token-stream parity assert.  JSON lands in
     ``benchmarks/out/sharded_serving.json``.
 
+    Since the unified write/attend primitive, two more columns per width:
+    the **prefill write transient** — compiled ``temp_size_in_bytes`` of the
+    shard_map ``staged_write_prefill`` vs the retained GSPMD baseline
+    (``gspmd_write_prefill``) on a (group=4, block=64) staged K/V block,
+    asserted O(group x block) (P-independent), never an O(P) replicated
+    pool — and **chunked stream parity**: the same workload re-served with
+    ``prefill_chunk=8`` through the sharded chunk scatter + C-row merge
+    must emit identical streams.  A dated summary row also appends to
+    ``BENCH_serving.json``.
+
     On CPU the shard_map runs over fake host devices, so the latency column
     is a dispatch-overhead trend (n interpreter shards + the psum merge),
     not an ICI model; the per-chip byte accounting is exact everywhere."""
@@ -382,6 +393,36 @@ def run_sharded():
         else:
             assert streams == base_streams, \
                 f"sharded stream divergence at n={n}"
+        # chunked prefill through the unified primitive: same streams
+        ceng = ServeEngine(lm, params, max_batch, max_seq,
+                           cache_backend="paged", page_size=page,
+                           num_pages=pool, mesh=mesh, prefill_chunk=8)
+        _drain_measured(ceng, cfg, n_requests, new_tokens)
+        cstreams = sorted((r.id, tuple(r.out_tokens))
+                          for r in ceng.finished)
+        assert cstreams == base_streams, \
+            f"chunked sharded stream divergence at n={n}"
+        # prefill write transient: the shard_map local scatter stages only
+        # the O(group x block) K/V block per chip, pool-size-independent
+        wgroup, wblock = 4, 64
+        staged_t = gspmd_t = None
+        if mesh is not None:
+            layers = eng.kv.state["layers"]
+            kv_block = {k: jax.ShapeDtypeStruct(
+                (cfg.num_layers, wgroup, wblock) + v.shape[3:],
+                jnp.float32) for k, v in layers.items()}
+            dest = jax.ShapeDtypeStruct((wgroup, wblock), jnp.int32)
+
+            def _temp(fn):
+                c = jax.jit(fn).lower(layers, kv_block, dest).compile()
+                return int(c.memory_analysis().temp_size_in_bytes)
+
+            staged_t = _temp(eng.kv.staged_write_prefill)
+            gspmd_t = _temp(eng.kv.gspmd_write_prefill)
+            analytic = prefill_transient_bytes(cfg, wgroup, wblock,
+                                               jnp.float32)
+            assert staged_t <= analytic, (staged_t, analytic)
+            assert staged_t < eng.kv.memory_stats().bytes_total
         st = eng.kv.memory_stats()
         assert st.mesh_chips == (n if mesh is not None else 1)
         assert st.bytes_per_chip == st.bytes_total // st.mesh_chips
@@ -406,7 +447,8 @@ def run_sharded():
                 jnp.asarray(np.zeros(max_batch, np.int32)),
                 jnp.asarray(np.ones(max_batch, np.float32)),
                 jnp.asarray(np.zeros(max_batch, np.int32)),
-                jnp.asarray(np.ones(max_batch, np.int32)), True)
+                jnp.asarray(np.ones(max_batch, np.int32)),
+                jnp.asarray(np.zeros(max_batch, bool)), True)
         tok, layers = eng._fused(params, *args)      # warm (donates view)
         jax.block_until_ready(layers)
         reps, t0 = 10, time.perf_counter()
@@ -425,6 +467,9 @@ def run_sharded():
             "tok_s": round(toks / wall, 1),
             "ttft_p50_ms": round(ttft * 1e3, 2),
             "stream_parity": True,
+            "chunked_stream_parity": True,
+            "prefill_write_transient_bytes": staged_t,
+            "prefill_write_transient_bytes_gspmd": gspmd_t,
         })
         rows.append((
             f"serving/sharded_step_n{n}", step_us,
@@ -435,8 +480,27 @@ def run_sharded():
     per_chip = {r["mesh"]: r["pinned_bytes_per_chip"] for r in records}
     for n in widths[1:]:
         assert per_chip[n] * n == per_chip[widths[0]] * widths[0], per_chip
+    # the write transient must NOT scale with the pool (it is the staged
+    # block, identical at every width that shards the same pool)
+    transients = [r["prefill_write_transient_bytes"] for r in records
+                  if r["prefill_write_transient_bytes"] is not None]
+    assert len(set(transients)) <= 1, transients
     SHARDED_JSON.parent.mkdir(parents=True, exist_ok=True)
     SHARDED_JSON.write_text(json.dumps(records, indent=1))
+    if transients:
+        widest = records[-1]
+        _append_trajectory({
+            "date": time.strftime("%Y-%m-%d"),
+            "bench": "sharded",
+            "mesh_widths": widths,
+            "pinned_bytes_per_chip_at_widest": widest[
+                "pinned_bytes_per_chip"],
+            "prefill_write_transient_bytes": transients[0],
+            "prefill_write_transient_bytes_gspmd": widest[
+                "prefill_write_transient_bytes_gspmd"],
+            "pool_bytes_total": widest["pinned_bytes_total"],
+            "stream_parity": True, "chunked_stream_parity": True,
+        })
     return rows
 
 

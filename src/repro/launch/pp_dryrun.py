@@ -128,7 +128,8 @@ def main():
     if cfg.family in ("dense", "vlm", "moe"):
         from repro.serve.kvcache import (contiguous_kv_bytes,
                                          decode_transient_bytes,
-                                         page_kv_bytes)
+                                         page_kv_bytes,
+                                         prefill_transient_bytes)
         kv_b, kv_s, kv_page = 64, 8192, 16
         kv_m = kv_s // kv_page
         kv_proj = {
@@ -145,6 +146,14 @@ def main():
                 cfg, kv_b, kv_m, kv_page, jnp.bfloat16, "gather"),
             "decode_transient_kernel_bytes": decode_transient_bytes(
                 cfg, kv_b, kv_m, kv_page, jnp.bfloat16, "pallas"),
+            # per-chip transient of the sharded prefill *write* path (a
+            # group of 4 chunk-length-512 staged blocks): the shard_map
+            # local scatter stages only the O(group x block) K/V block —
+            # vs the O(P) pool a replicated GSPMD transient would cost
+            "prefill_transient_sharded_bytes": prefill_transient_bytes(
+                cfg, 4, 512, jnp.bfloat16),
+            "prefill_transient_replicated_pool_bytes":
+                kv_b * kv_m * page_kv_bytes(cfg, kv_page, jnp.bfloat16),
         }
     rec = {
         "arch": args.arch, "shape": f"pp_fwd_b{b}_s{s}",

@@ -20,6 +20,10 @@ contiguous dense rows via ``--cache-backend contiguous``.
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         python -m repro.launch.serve --mesh 4   # sharded paged serving:
         # pools pinned P/4 pages per chip, partial-softmax merged reads
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.launch.serve --mesh dp=2,model=4   # 2-D mesh:
+        # pool shards P/4 over the model axis, dispatch batch dims shard
+        # over 2 DP replicas, merge runs per replica
     python -m repro.launch.serve \
         --tenants chat=interactive,bulk=batch --quota bulk=24 \
         # multi-tenant SLO serving: priority-ordered admission, per-tenant
@@ -42,6 +46,24 @@ import numpy as np
 from repro.configs import CONFIGS, get_config
 from repro.models import LM
 from repro.serve import Request, SamplingParams, ServeEngine
+
+
+def _parse_mesh(spec: str):
+    """Parse --mesh: 'N' -> (0, N) 1-D pool mesh; 'DxM' / 'D,M' /
+    'dp=D,model=M' -> (D, M) 2-D batch x pages mesh.  '0' -> (0, 0)."""
+    spec = spec.strip().lower()
+    if "=" in spec:
+        kv = dict(part.split("=", 1) for part in spec.split(","))
+        unknown = set(kv) - {"dp", "model"}
+        if unknown:
+            raise SystemExit(f"--mesh: unknown axes {sorted(unknown)} "
+                             "(expected dp=D,model=M)")
+        return int(kv.get("dp", 1)), int(kv["model"])
+    for sep in ("x", ","):
+        if sep in spec:
+            d, m = spec.split(sep, 1)
+            return int(d), int(m)
+    return 0, int(spec)
 
 
 def main():
@@ -87,24 +109,31 @@ def main():
                          "wrote), claiming pages chunk-by-chunk so a long "
                          "prompt admits into a pool whose free pages cover "
                          "only its first chunk.  0 = whole-prompt prefill.  "
-                         "Requires --cache-backend paged; single-device")
+                         "Requires --cache-backend paged; composes with "
+                         "--mesh (chunks route through the unified sharded "
+                         "write/attend primitive)")
     ap.add_argument("--prefill-budget", type=int, default=0, metavar="T",
                     help="max prefill tokens per engine iteration "
                          "(>= one chunk; default: exactly one chunk) — the "
                          "bound on how long any decode iteration can wait "
                          "on prefill compute")
-    ap.add_argument("--mesh", type=int, default=0, metavar="N",
-                    help="sharded paged serving over an N-chip inference "
-                         "mesh: the page pool's kv_pages dim shards P/N "
+    ap.add_argument("--mesh", default="0", metavar="N|DxM",
+                    help="sharded paged serving over an inference mesh.  "
+                         "'N': the page pool's kv_pages dim shards P/N "
                          "pages per chip (pool HBM scales down with N) and "
-                         "the fused decode runs under shard_map — each chip "
-                         "attends only to the page-id range it owns, "
-                         "skipping non-local pages like dead pages, and the "
-                         "per-chip online-softmax partials (acc, l, m) "
-                         "combine with one psum-style partial-softmax "
-                         "merge.  Requires N visible devices (on CPU: "
-                         "XLA_FLAGS=--xla_force_host_platform_device_count="
-                         "N) and --cache-backend paged.  0 = single-device")
+                         "every dispatch — fused decode, whole-prompt "
+                         "prefill writes, chunked prefill — runs under the "
+                         "unified shard_map primitive: per-chip "
+                         "mode='drop' local pool writes, local-window "
+                         "attention partials, one psum-style partial-"
+                         "softmax merge.  'DxM' / 'D,M' / 'dp=D,model=M': "
+                         "a 2-D batch x pages mesh — the pool shards P/M "
+                         "over the model axis (replicated across DP), "
+                         "dispatch batch dims shard over D replicas, and "
+                         "the merge runs per DP replica.  Requires D*M "
+                         "visible devices (on CPU: XLA_FLAGS=--xla_force_"
+                         "host_platform_device_count=K) and "
+                         "--cache-backend paged.  0 = single-device")
     ap.add_argument("--mesh-axis", default="model",
                     help="mesh axis name the kv_pages dim maps onto "
                          "(default: model, matching the kv_pages sharding "
@@ -159,10 +188,17 @@ def main():
         cfg = dataclasses.replace(cfg.reduced(), dtype="float32")
     lm = LM(cfg)
     params = lm.init(jax.random.key(0))
-    mesh = None
-    if args.mesh:
+    mesh, dp_axis = None, None
+    dp, nkv = _parse_mesh(args.mesh)
+    if nkv:
         from repro.parallel.mesh import make_mesh
-        mesh = make_mesh((args.mesh,), (args.mesh_axis,))
+        if dp:
+            # 2-D batch x pages mesh: dp axis named 'data' (matching the
+            # batch sharding rule in repro.parallel.sharding)
+            mesh = make_mesh((dp, nkv), ("data", args.mesh_axis))
+            dp_axis = "data"
+        else:
+            mesh = make_mesh((nkv,), (args.mesh_axis,))
     tenancy = None
     if args.tenants:
         from repro.serve import TenancyConfig
@@ -187,7 +223,7 @@ def main():
                       page_size=args.page_size, num_pages=args.num_pages,
                       prefix_sharing=not args.no_prefix_sharing,
                       decode_impl=args.decode_impl, mesh=mesh,
-                      kv_axis=args.mesh_axis,
+                      kv_axis=args.mesh_axis, dp_axis=dp_axis,
                       prefill_chunk=args.prefill_chunk,
                       prefill_budget=args.prefill_budget,
                       kv_dtype=args.kv_dtype, tenancy=tenancy,
@@ -243,7 +279,10 @@ def main():
               f"transient {transient/1e3:.1f} kB/layer")
     if st.backend == "paged" and st.kv_dtype == "int8":
         saved = eng.reg.gauge("serve_kv_quant_bytes_saved").get()
-        print(f"kv quant [int8]: {st.bytes_scales/1e3:.1f} kB scales, "
+        per_chip = (f" ({st.bytes_scales_per_chip/1e3:.1f} kB/chip)"
+                    if st.mesh_chips > 1 else "")
+        print(f"kv quant [int8]: {st.bytes_scales/1e3:.1f} kB scales"
+              f"{per_chip}, "
               f"{saved/1e6:.2f} MB saved vs {np.dtype(eng.kv.dtype).name} "
               f"pages "
               f"({(st.bytes_total + saved)/max(st.bytes_total, 1):.2f}x "

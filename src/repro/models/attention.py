@@ -501,9 +501,96 @@ def _scatter_chunk_paged(pool, new, dest):
     return flat.reshape(pool.shape)
 
 
+def scatter_chunk_paged_local(pool, new, dest, row_offset):
+    """Sharded chunk/prefill pool write (inside shard_map): the local-window
+    twin of ``_scatter_chunk_paged``, same routing as
+    ``scatter_paged_kv_local`` but over precomputed flat rows.
+
+    ``dest`` holds GLOBAL flat pool rows (page · page_size + row); the chip
+    owning rows ``[row_offset, row_offset + P/n·page)`` commits them at the
+    local flat index, every other chip routes them one past its shard end
+    and ``mode="drop"`` discards the update.  Scratch-routed positions
+    (flat row 0) land on chip 0's scratch page, exactly as on one chip."""
+    pn, page = pool.shape[:2]
+    rows = pn * page
+    flat = pool.reshape(rows, *pool.shape[2:])
+    local = dest.reshape(-1) - row_offset
+    idx = jnp.where((local >= 0) & (local < rows), local, rows)
+    flat = flat.at[idx].set(
+        new.reshape(-1, *new.shape[2:]).astype(pool.dtype), mode="drop")
+    return flat.reshape(pool.shape)
+
+
+def paged_gather_chunk_partials(q, k_pool, v_pool, page_table, qpos,
+                                last_pos, page_offset,
+                                k_scale=None, v_scale=None):
+    """Per-chip partial chunked-prefill attention by XLA gather — the C-row
+    generalization of ``paged_gather_partials`` (decode is the C=1 case
+    with a plain ``col <= pos`` mask).
+
+    q: (B, C, KV, G, D) chunk queries; pools: one chip's LOCAL
+    (P/n, page, KV, D) shard; page_table: (B, M) GLOBAL ids; qpos: (B, C)
+    each row's global position; last_pos: (B,) the chunk's last valid
+    position (limits the gather to claimed pages and clamps padding rows);
+    page_offset: global id of the shard's first page.  Non-local pages
+    redirect to local page 0 with their scores at NEG_INF — dead-page
+    semantics — and the causal mask is position-exact per row
+    (``col <= min(qpos, last_pos)``), matching the single-chip chunk block.
+
+    Returns the raw fp32 triple ``(acc (B,C,KV,G,D), l (B,KV,G,C),
+    m (B,KV,G,C))`` for ``merge_paged_chunk_partials``.
+
+    ``k_scale``/``v_scale`` (int8 pools): the local (P/n, page, KV) fp32
+    scale shards — gathered rows dequantize through the same redirected
+    table before the score/accumulate einsums."""
+    hd = q.shape[-1]
+    b, m = page_table.shape
+    pn, page = k_pool.shape[:2]
+    live = jnp.arange(m)[None, :] <= last_pos[:, None] // page    # (B, M)
+    local = page_table - page_offset
+    ok = live & (local >= 0) & (local < pn)
+    lt = jnp.where(ok, local, 0)
+    kg = jnp.take(k_pool, lt, axis=0).reshape(b, m * page, *k_pool.shape[2:])
+    vg = jnp.take(v_pool, lt, axis=0).reshape(b, m * page, *v_pool.shape[2:])
+    if k_scale is not None:
+        kg = dequant_gathered(kg, k_scale, lt, b, m * page, jnp.float32)
+        vg = dequant_gathered(vg, v_scale, lt, b, m * page, jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, kg).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    cols = jnp.arange(m * page)
+    valid = (cols[None, None, :]
+             <= jnp.minimum(qpos, last_pos[:, None])[:, :, None]) \
+        & jnp.repeat(ok, page, axis=1)[:, None, :]                # (B, C, S)
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
+    mx = jnp.max(s, axis=-1)                                   # (B,KV,G,C)
+    pr = jnp.where(valid[:, None, None, :, :],
+                   jnp.exp(s - mx[..., None]), 0.0)
+    l = pr.sum(axis=-1)                                        # (B,KV,G,C)
+    acc = jnp.einsum("bkgqs,bskd->bqkgd", pr, vg.astype(jnp.float32))
+    return acc, l, mx
+
+
+def merge_paged_chunk_partials(acc, l, m, axis_name: str):
+    """Cross-chip online-softmax merge for C-row chunk partials — the chunk
+    generalization of ``merge_paged_partials`` (same pmax + two psums, the
+    row dim riding along).
+
+    acc: (B, C, KV, G, D) unnormalized; l, m: (B, KV, G, C).  The
+    denominator can only vanish on padding rows past ``last_pos`` — whose
+    outputs the caller discards — so the 1e-30 floor never perturbs a
+    consumed row."""
+    gm = jax.lax.pmax(m, axis_name)
+    w = jnp.exp(m - gm)                                        # (B,KV,G,C)
+    num = jax.lax.psum(acc * w.transpose(0, 3, 1, 2)[..., None], axis_name)
+    den = jax.lax.psum(l * w, axis_name)
+    return num / jnp.maximum(den, 1e-30).transpose(0, 3, 1, 2)[..., None]
+
+
 def attention_prefill_chunk_block(p, cfg, x, k_pool, v_pool, start_pos, dest,
                                   page_table, last_pos,
-                                  k_scale=None, v_scale=None):
+                                  k_scale=None, v_scale=None,
+                                  mesh=None, kv_axis: str = "model",
+                                  dp_axis=None):
     """Chunked-prefill attention with prior cache: a (B, C) token chunk at a
     per-request position offset writes its K/V into the paged pools and
     attends causally over everything written so far — the pages landed by
@@ -529,7 +616,14 @@ def attention_prefill_chunk_block(p, cfg, x, k_pool, v_pool, start_pos, dest,
     the scatter — scales land through the same ``dest`` indices — and the
     gathered views dequantize before attention, so a chunk attends its own
     rows exactly as a later decode step will read them (round-tripped
-    through int8).  Returns a 5-tuple including the new scale arrays."""
+    through int8).  Returns a 5-tuple including the new scale arrays.
+
+    ``mesh`` (kv_pages-sharded pools): the scatter + attend run through the
+    unified shard_map primitive instead —
+    ``repro.parallel.pagedkv.sharded_prefill_chunk_attention`` (per-chip
+    ``mode="drop"`` local writes, C-row local partials, partial-softmax
+    merge over ``kv_axis``; ``dp_axis`` shards the chunk batch on 2-D
+    meshes)."""
     quantized = k_scale is not None
     b, c = x.shape[:2]
     qpos = start_pos[:, None] + jnp.arange(c)[None, :]            # (B, C)
@@ -538,6 +632,21 @@ def attention_prefill_chunk_block(p, cfg, x, k_pool, v_pool, start_pos, dest,
         from repro.kernels.quant import quantize_kv
         k, sk = quantize_kv(k)
         v, sv = quantize_kv(v)
+    if mesh is not None:
+        from repro.parallel.pagedkv import sharded_prefill_chunk_attention
+        out = sharded_prefill_chunk_attention(
+            mesh, kv_axis, q, k, v, dest, k_pool, v_pool, page_table,
+            start_pos, last_pos,
+            k_scale=k_scale, v_scale=v_scale,
+            k_scale_new=sk if quantized else None,
+            v_scale_new=sv if quantized else None, dp_axis=dp_axis)
+        if quantized:
+            y, k_pool, v_pool, k_scale, v_scale = out
+            return (output_proj(p, cfg, y), k_pool, v_pool,
+                    k_scale, v_scale)
+        y, k_pool, v_pool = out
+        return output_proj(p, cfg, y), k_pool, v_pool
+    if quantized:
         k_scale = _scatter_chunk_paged(k_scale, sk, dest)
         v_scale = _scatter_chunk_paged(v_scale, sv, dest)
     k_pool = _scatter_chunk_paged(k_pool, k, dest)
@@ -570,7 +679,7 @@ def attention_prefill_chunk_block(p, cfg, x, k_pool, v_pool, start_pos, dest,
 def attention_decode_block(p, cfg, x, k_cache, v_cache, cache_index,
                            rope: bool = True, page_table=None,
                            decode_impl: str = "gather", mesh=None,
-                           kv_axis: str = "model",
+                           kv_axis: str = "model", dp_axis=None,
                            k_scale=None, v_scale=None):
     """One-token decode.  x: (B,1,d).  ``cache_index`` is a scalar
     (synchronized batch) or a (B,) vector of per-slot positions (ragged
@@ -602,7 +711,8 @@ def attention_decode_block(p, cfg, x, k_cache, v_cache, cache_index,
             from repro.parallel.pagedkv import sharded_paged_decode_attention
             out = sharded_paged_decode_attention(
                 mesh, kv_axis, q, k, v, k_cache, v_cache, page_table, pos,
-                decode_impl, k_scale=k_scale, v_scale=v_scale)
+                decode_impl, k_scale=k_scale, v_scale=v_scale,
+                dp_axis=dp_axis)
             if quantized:
                 y, k_cache, v_cache, k_scale, v_scale = out
             else:

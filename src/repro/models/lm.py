@@ -65,7 +65,7 @@ class LM:
 
     def decode_step(self, params, tokens, cache, cache_index,
                     scan_layers: bool = True, decode_impl: str = "gather",
-                    mesh=None, kv_axis: str = "model"):
+                    mesh=None, kv_axis: str = "model", dp_axis=None):
         """One-token decode.  ``cache_index`` is a scalar shared position or
         a (B,) per-slot position vector (ragged continuous batching).
         ``decode_impl`` selects how a paged cache's page table is resolved
@@ -81,10 +81,11 @@ class LM:
         return transformer.decode_step(params, self.cfg, tokens, cache,
                                        cache_index, scan_layers=scan_layers,
                                        decode_impl=decode_impl, mesh=mesh,
-                                       kv_axis=kv_axis)
+                                       kv_axis=kv_axis, dp_axis=dp_axis)
 
     def prefill_chunk(self, params, tokens, cache, start_pos, dest, last_pos,
-                      scan_layers: bool = True):
+                      scan_layers: bool = True, mesh=None,
+                      kv_axis: str = "model", dp_axis=None):
         """One chunk of chunked prefill: forward (B, C) prompt tokens at
         position offset ``start_pos`` against a paged cache view, scattering
         K/V into the pools at ``dest`` and attending over prior chunks'
@@ -95,7 +96,8 @@ class LM:
             "dense state)")
         return transformer.prefill_chunk(params, self.cfg, tokens, cache,
                                          start_pos, dest, last_pos,
-                                         scan_layers=scan_layers)
+                                         scan_layers=scan_layers, mesh=mesh,
+                                         kv_axis=kv_axis, dp_axis=dp_axis)
 
     def init_cache(self, batch_size: int, max_seq: int, enc_len: int = 0,
                    dtype=jnp.bfloat16, abstract: bool = False,
@@ -103,7 +105,7 @@ class LM:
                    num_pages: Optional[int] = None,
                    prefix_sharing: bool = True,
                    decode_impl: str = "gather",
-                   mesh=None, kv_axis: str = "model",
+                   mesh=None, kv_axis: str = "model", dp_axis=None,
                    kv_dtype: str = "native",
                    locality_chips: Optional[int] = None):
         """Decode cache construction.
@@ -127,7 +129,8 @@ class LM:
                               num_pages=num_pages,
                               prefix_sharing=prefix_sharing,
                               decode_impl=decode_impl, mesh=mesh,
-                              kv_axis=kv_axis, kv_dtype=kv_dtype,
+                              kv_axis=kv_axis, dp_axis=dp_axis,
+                              kv_dtype=kv_dtype,
                               locality_chips=locality_chips)
         assert kv_dtype == "native", (
             "int8 KV pages are a managed paged-backend format "

@@ -379,7 +379,7 @@ def _scan_or_unroll(body, init, xs, n: int, scan: bool):
 
 def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
                 scan_layers: bool = True, decode_impl: str = "gather",
-                mesh=None, kv_axis: str = "model"):
+                mesh=None, kv_axis: str = "model", dp_axis=None):
     """One-token decode.  tokens: (B, 1).  Returns (logits, new_cache).
 
     ``cache_index`` is a scalar (all sequences at the same depth) or a (B,)
@@ -436,6 +436,7 @@ def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
                     lp["attn"], cfg, a_in, layer_cache["k"],
                     layer_cache["v"], cache_index, page_table=page_table,
                     decode_impl=decode_impl, mesh=mesh, kv_axis=kv_axis,
+                    dp_axis=dp_axis,
                     k_scale=layer_cache["k_scale"],
                     v_scale=layer_cache["v_scale"])
                 new_cache = {"k": nk, "v": nv,
@@ -444,7 +445,8 @@ def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
                 a, nk, nv = attn.attention_decode_block(
                     lp["attn"], cfg, a_in, layer_cache["k"],
                     layer_cache["v"], cache_index, page_table=page_table,
-                    decode_impl=decode_impl, mesh=mesh, kv_axis=kv_axis)
+                    decode_impl=decode_impl, mesh=mesh, kv_axis=kv_axis,
+                    dp_axis=dp_axis)
                 new_cache = {"k": nk, "v": nv}
             h = h + a
             f_in = apply_norm(lp["ln2"], h, cfg)
@@ -531,7 +533,8 @@ def decode_step(params, cfg, tokens, cache, cache_index, img_embeds=None,
 
 
 def prefill_chunk(params, cfg, tokens, cache, start_pos, dest, last_pos,
-                  scan_layers: bool = True):
+                  scan_layers: bool = True, mesh=None,
+                  kv_axis: str = "model", dp_axis=None):
     """Chunked prefill with prior cache: forward a (B, C) chunk of prompt
     tokens at global position offset ``start_pos`` through the stack; each
     layer scatter-writes the chunk's K/V into the paged pools at ``dest``
@@ -550,7 +553,14 @@ def prefill_chunk(params, cfg, tokens, cache, start_pos, dest, last_pos,
     state has no position-indexed cache to chunk into, and MoE capacity
     routing (``moe_ffn``'s per-sequence token dropping) depends on the
     forwarded group shape, so chunk-at-a-time routing would diverge from
-    the whole prompt's."""
+    the whole prompt's.
+
+    ``mesh``/``kv_axis``/``dp_axis``: with a device mesh, each layer's
+    chunk scatter + attention runs under the same shard_map primitive as
+    decode (``repro.parallel.pagedkv.sharded_prefill_chunk_attention``) —
+    pools stay ``kv_pages``-sharded P/n, writes are per-chip
+    ``mode="drop"`` local scatters, and the partial-softmax merge psums
+    over ``kv_axis`` only (per-DP-replica on 2-D meshes)."""
     assert cfg.family in ("dense", "vlm"), (
         "chunked prefill is dense-FFN attention-cache families only "
         f"(family={cfg.family})")
@@ -567,12 +577,14 @@ def prefill_chunk(params, cfg, tokens, cache, start_pos, dest, last_pos,
                 lp["attn"], cfg, a_in, layer_cache["k"], layer_cache["v"],
                 start_pos, dest, page_table, last_pos,
                 k_scale=layer_cache["k_scale"],
-                v_scale=layer_cache["v_scale"])
+                v_scale=layer_cache["v_scale"],
+                mesh=mesh, kv_axis=kv_axis, dp_axis=dp_axis)
             new_cache = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
         else:
             a, nk, nv = attn.attention_prefill_chunk_block(
                 lp["attn"], cfg, a_in, layer_cache["k"], layer_cache["v"],
-                start_pos, dest, page_table, last_pos)
+                start_pos, dest, page_table, last_pos,
+                mesh=mesh, kv_axis=kv_axis, dp_axis=dp_axis)
             new_cache = {"k": nk, "v": nv}
         h = h + a
         f_in = apply_norm(lp["ln2"], h, cfg)

@@ -6,7 +6,7 @@ from repro.serve.kvcache import (CacheInvariantError, ContiguousCache,
                                  KVCache, MemoryStats, PagedCache,
                                  contiguous_kv_bytes,
                                  decode_transient_bytes, make_cache,
-                                 page_kv_bytes)
+                                 page_kv_bytes, prefill_transient_bytes)
 from repro.serve.sampling import filtered_probs, sample_batch
 from repro.serve.tenancy import (BATCH, INTERACTIVE, PriorityClass,
                                  TenancyConfig, TenantSpec, Victim,
@@ -17,6 +17,7 @@ __all__ = ["Request", "SamplingParams", "ServeEngine", "sample_token",
            "TransientDispatchError", "CacheInvariantError",
            "filtered_probs", "sample_batch", "KVCache", "ContiguousCache",
            "PagedCache", "MemoryStats", "make_cache", "contiguous_kv_bytes",
-           "decode_transient_bytes", "page_kv_bytes", "PriorityClass",
+           "decode_transient_bytes", "page_kv_bytes",
+           "prefill_transient_bytes", "PriorityClass",
            "INTERACTIVE", "BATCH", "TenantSpec", "TenancyConfig", "Victim",
            "next_victim"]

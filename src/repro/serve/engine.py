@@ -217,7 +217,7 @@ class ServeEngine:
                  num_pages: Optional[int] = None,
                  prefix_sharing: bool = True,
                  decode_impl: str = "gather",
-                 mesh=None, kv_axis: str = "model",
+                 mesh=None, kv_axis: str = "model", dp_axis=None,
                  prefill_chunk: int = 0, prefill_budget: int = 0,
                  kv_dtype: str = "native",
                  tenancy: Optional[TenancyConfig] = None,
@@ -247,7 +247,8 @@ class ServeEngine:
                                 num_pages=num_pages,
                                 prefix_sharing=prefix_sharing,
                                 decode_impl=decode_impl, mesh=mesh,
-                                kv_axis=kv_axis, kv_dtype=kv_dtype,
+                                kv_axis=kv_axis, dp_axis=dp_axis,
+                                kv_dtype=kv_dtype,
                                 locality_chips=locality_chips)
         # fault injection + detection + recovery (repro.serve.faults): the
         # plan is polled once per step; all detection state is host-side
@@ -287,11 +288,6 @@ class ServeEngine:
                     "chunked prefill is page-aware: chunks claim pages "
                     "incrementally and mid-prefill slots shield their table "
                     "rows from decode (use cache_backend='paged')")
-            if mesh is not None:
-                raise ValueError(
-                    "chunked prefill under a kv_pages-sharded pool needs the "
-                    "per-chip mode='drop' chunk scatter (ROADMAP follow-on); "
-                    "serve single-device or disable chunking")
             if self.img_len:
                 raise ValueError(
                     "chunked prefill covers token prompts; VLM image-embed "
@@ -452,6 +448,7 @@ class ServeEngine:
         lm, vocab = self.lm, self.lm.cfg.vocab_size
         decode_impl = self.kv.decode_impl   # fixed per engine (kvcache config)
         mesh, kv_axis = self.kv.mesh, self.kv.kv_axis
+        dp_axis = self.kv.dp_axis
 
         def fused(params, tokens, layers, page_table, positions, active,
                   temps, top_ks, top_ps, seeds, steps, poison, all_greedy):
@@ -460,7 +457,8 @@ class ServeEngine:
                 cache["page_table"] = page_table
             logits, cache = lm.decode_step(params, tokens, cache, positions,
                                            decode_impl=decode_impl,
-                                           mesh=mesh, kv_axis=kv_axis)
+                                           mesh=mesh, kv_axis=kv_axis,
+                                           dp_axis=dp_axis)
             rows = logits[:, -1, :vocab].astype(jnp.float32)
             # nan_logits fault seam: a traced (B,) mask NaNs the victim's
             # row *inside* the dispatch, so detection exercises the real
@@ -513,20 +511,30 @@ class ServeEngine:
         return run
 
     def _make_chunk(self):
-        """One chunked-prefill device call: forward a (1, C) chunk against
-        the slot's pages (``lm.prefill_chunk`` — scatter + prior-cache
-        attention), and sample a would-be first token from the chunk's last
-        valid row.  The sampled token is consumed only when this was the
-        prompt's final chunk; computing it unconditionally keeps the trace
-        count at one.  jit caches exactly one trace: every chunk is padded
-        to the fixed chunk length."""
+        """One chunked-prefill device call: forward a stacked (n, C) round
+        of chunks — at most one chunk per slot — against their pages
+        (``lm.prefill_chunk`` — scatter + prior-cache attention), and
+        sample a would-be first token from each chunk's last valid row.
+        A sampled token is consumed only when that chunk was its prompt's
+        final one; computing it unconditionally keeps traces cheap.  jit
+        caches one trace per round group size (same shape discipline as
+        ``_prefill_group``); every chunk is padded to the fixed length.
+
+        Under ``mesh=`` the chunk forward routes through the sharded
+        write/attend primitive (per-chip ``mode="drop"`` scatters + the
+        partial-softmax merge) — the captured mesh/axes mirror
+        ``_make_fused``."""
         lm, vocab = self.lm, self.lm.cfg.vocab_size
+        mesh, kv_axis = self.kv.mesh, self.kv.kv_axis
+        dp_axis = self.kv.dp_axis
 
         def run(params, tokens, layers, page_row, dest, start_pos, last_pos,
                 temps, top_ks, top_ps, seeds, steps):
             cache = {"layers": layers, "page_table": page_row}
             logits, cache = lm.prefill_chunk(params, tokens, cache,
-                                             start_pos, dest, last_pos)
+                                             start_pos, dest, last_pos,
+                                             mesh=mesh, kv_axis=kv_axis,
+                                             dp_axis=dp_axis)
             rows = logits[:, -1, :vocab].astype(jnp.float32)
             toks = sample_batch(rows, temps, top_ks, top_ps, seeds, steps)
             # the chunk attends prior pages: a poisoned page surfaces here
@@ -913,52 +921,67 @@ class ServeEngine:
             self._export_memory()
 
     def _run_prefill_chunks(self, budget: int, skip=(), cls_spent=None):
-        """Dispatch up to ``budget`` tokens of prefill chunks — admission
-        order without tenancy (dict order); with tenancy, TTFT-sensitive
-        classes chunk first (priority order, ``_seq`` tiebreak) and a
-        class's per-iteration token cap (``PriorityClass.prefill_budget``,
-        tracked across both same-iteration passes via ``cls_spent``) stops
-        batch-class prompts from monopolizing the global budget.  Each
-        chunk first ``extend``s the slot's pages to cover its end — the
-        *final* chunk extends to the full footprint, claiming the decode
-        tail — and a chunk whose grant is not banker-safe stalls (the slot
-        resumes in a later iteration once completions free pages; later
-        admissions may keep chunking meanwhile).  When a slot's last chunk
-        lands it is unshielded, marked active with the sampled first token
-        pending, and decodes in this same iteration's fused dispatch.
-        Returns (budget tokens consumed, slots that stalled) — ``skip``
-        lets the second same-iteration pass avoid re-stalling slots the
-        first already counted."""
+        """Dispatch up to ``budget`` tokens of prefill chunks in stacked
+        rounds: each round collects at most one chunk per mid-prefill slot
+        (same-slot chunks are sequentially dependent — chunk k attends the
+        pages chunk k-1 wrote) and forwards them as ONE (n, C)
+        ``_chunk_step`` dispatch, the chunk-time mirror of
+        ``_prefill_group``'s stacked whole-prompt dispatch.  Rounds repeat
+        while budget remains and slots still have chunks, so a lone long
+        prompt drains its budget exactly as the per-slot loop did.
+
+        Collection order is admission order without tenancy (dict order);
+        with tenancy, TTFT-sensitive classes collect first (priority
+        order, ``_seq`` tiebreak) and a class's per-iteration token cap
+        (``PriorityClass.prefill_budget``, tracked across both
+        same-iteration passes via ``cls_spent``) stops batch-class prompts
+        from monopolizing the global budget.  Each collected chunk first
+        ``extend``s the slot's pages to cover its end — the *final* chunk
+        extends to the full footprint, claiming the decode tail — and a
+        chunk whose grant is not banker-safe stalls (the slot resumes in a
+        later iteration once completions free pages; the round dispatches
+        without it).  When a slot's last chunk lands it is unshielded,
+        marked active with the sampled first token pending, and decodes in
+        this same iteration's fused dispatch.  Returns (budget tokens
+        consumed, slots that stalled) — ``skip`` lets the second
+        same-iteration pass avoid re-stalling slots the first already
+        counted."""
         landed = spent = 0
         stalled: set = set()
         cls_spent: Dict[str, int] = \
             cls_spent if cls_spent is not None else {}
         if not self.prefilling:
             return spent, stalled
-        order = list(self.prefilling)
-        if self.tenancy is not None:
-            order.sort(key=lambda s: (-self._prio(self.prefilling[s].req),
-                                      self.prefilling[s].req._seq))
-        for slot in order:
-            if slot in skip:
-                continue
-            st = self.prefilling[slot]
-            req = st.req
-            ptoks = st.tokens if st.tokens is not None else req.prompt
-            plen = len(ptoks)
-            cname = self._class_name(req)
-            cap = (self.tenancy.classes[cname].prefill_budget
-                   if self.tenancy is not None else None)
-            while (budget >= self.chunk and st.done < plen
-                   and (cap is None
-                        or cls_spent.get(cname, 0) + self.chunk <= cap)):
+        done_slots: set = set(skip)     # no further chunks this call
+        while budget >= self.chunk and self.prefilling:
+            order = [s for s in self.prefilling if s not in done_slots]
+            if self.tenancy is not None:
+                order.sort(
+                    key=lambda s: (-self._prio(self.prefilling[s].req),
+                                   self.prefilling[s].req._seq))
+            group = []      # (slot, st, req, ptoks, end, final, dest)
+            for slot in order:
+                if (len(group) + 1) * self.chunk > budget:
+                    break
+                st = self.prefilling[slot]
+                req = st.req
+                ptoks = st.tokens if st.tokens is not None else req.prompt
+                plen = len(ptoks)
+                cname = self._class_name(req)
+                cap = (self.tenancy.classes[cname].prefill_budget
+                       if self.tenancy is not None else None)
+                if (cap is not None
+                        and cls_spent.get(cname, 0) + self.chunk > cap):
+                    done_slots.add(slot)
+                    continue
                 if self._iter < self._stall_until.get(slot, 0):
                     # injected stall_chunk fault: behaves exactly like a
                     # banker-unsafe grant until the stall expires
                     self.reg.counter(
                         "serve_prefill_chunk_stalls_total").inc()
                     stalled.add(slot)
-                    break
+                    done_slots.add(slot)
+                    continue
                 end = min(st.done + self.chunk, plen)
                 final = end == plen
                 cover = self._footprint(req) if final else end
@@ -966,39 +989,64 @@ class ServeEngine:
                     self.reg.counter(
                         "serve_prefill_chunk_stalls_total").inc()
                     stalled.add(slot)
-                    break                    # defer-and-resume, not deadlock
-                tokens = np.zeros((1, self.chunk), np.int32)
-                tokens[0, :end - st.done] = ptoks[st.done:end]
+                    done_slots.add(slot)
+                    continue             # defer-and-resume, not deadlock
                 dest = self.kv.chunk_dest(slot, st.done, end, self.chunk,
                                           st.shared)
+                cls_spent[cname] = cls_spent.get(cname, 0) + self.chunk
+                group.append((slot, st, req, ptoks, end, final, dest))
+            if not group:
+                break
+            n = len(group)
+            tokens = np.zeros((n, self.chunk), np.int32)
+            dests = np.zeros((n, self.chunk), np.int32)
+            rows = np.zeros((n,) + self.kv.table_row(group[0][0]).shape,
+                            np.int32)
+            starts = np.zeros(n, np.int32)
+            lasts = np.zeros(n, np.int32)
+            temps = np.zeros(n, np.float32)
+            top_ks = np.zeros(n, np.int32)
+            top_ps = np.ones(n, np.float32)
+            seeds = np.zeros(n, np.int32)
+            steps = np.zeros(n, np.int32)
+            for j, (slot, st, req, ptoks, end, final, dest) in \
+                    enumerate(group):
+                tokens[j, :end - st.done] = ptoks[st.done:end]
+                dests[j] = dest
+                rows[j] = self.kv.table_row(slot)
+                starts[j] = st.done
+                lasts[j] = end - 1
                 sp = req.sampling
-                toks, new_layers = self._chunk_step(
-                    self.params, jnp.asarray(tokens),
-                    self.kv.state["layers"],
-                    jnp.asarray(self.kv.table_row(slot)[None]),
-                    jnp.asarray(dest[None]),
-                    jnp.asarray([st.done], jnp.int32),
-                    jnp.asarray([end - 1], jnp.int32),
-                    jnp.asarray([sp.temperature], jnp.float32),
-                    jnp.asarray([sp.top_k], jnp.int32),
-                    jnp.asarray([sp.top_p], jnp.float32),
-                    jnp.asarray([sp.seed], jnp.int32),
-                    jnp.asarray([len(req.out_tokens)], jnp.int32))
-                self.kv.update({**self.kv.state, "layers": new_layers})
-                self.reg.counter("serve_prefill_chunks_total").inc()
-                self.reg.counter("serve_prefill_dispatches_total").inc()
+                temps[j] = sp.temperature
+                top_ks[j] = sp.top_k
+                top_ps[j] = sp.top_p
+                seeds[j] = sp.seed
+                steps[j] = len(req.out_tokens)
+            toks, new_layers = self._chunk_step(
+                self.params, jnp.asarray(tokens),
+                self.kv.state["layers"], jnp.asarray(rows),
+                jnp.asarray(dests), jnp.asarray(starts),
+                jnp.asarray(lasts), jnp.asarray(temps),
+                jnp.asarray(top_ks), jnp.asarray(top_ps),
+                jnp.asarray(seeds), jnp.asarray(steps))
+            self.kv.update({**self.kv.state, "layers": new_layers})
+            self.reg.counter("serve_prefill_chunks_total").inc(n)
+            self.reg.counter("serve_prefill_dispatches_total").inc()
+            toks = np.asarray(toks)
+            for j, (slot, st, req, ptoks, end, final, dest) in \
+                    enumerate(group):
                 self.reg.counter("serve_prefill_tokens_total").inc(
                     end - st.done)
                 budget -= self.chunk
                 spent += self.chunk
-                cls_spent[cname] = cls_spent.get(cname, 0) + self.chunk
-                tok0 = int(np.asarray(toks)[0])
+                tok0 = int(toks[j])
                 if tok0 == -1:
                     # the chunk attended non-finite content (a poisoned
                     # page): quarantine before the landed pages can enter
                     # the prefix registry and re-share the corruption
                     self._recover(slot, "nonfinite_logits")
-                    break
+                    done_slots.add(slot)
+                    continue
                 self.kv.register_landed(slot, ptoks, end)
                 landed += end - st.done
                 st.done = end
@@ -1006,15 +1054,14 @@ class ServeEngine:
                 if final:
                     del self.prefilling[slot]
                     self.kv.set_decode_shield(slot, False)
-                    self.slot_pos[slot] = self.img_len + plen
+                    sp = req.sampling
+                    self.slot_pos[slot] = self.img_len + len(ptoks)
                     self.next_token[slot] = tok0
                     self.active[slot] = True
                     self.temps[slot] = sp.temperature
                     self.top_ks[slot] = sp.top_k
                     self.top_ps[slot] = sp.top_p
                     self.seeds[slot] = sp.seed
-            if budget < self.chunk:
-                break
         if landed:
             self._export_memory()
         return spent, stalled

@@ -117,6 +117,18 @@ def decode_transient_bytes(cfg, batch: int, max_pages: int, page_size: int,
     return 2 * page_size * hd * itemsize + 4 * g * (hd + 2)
 
 
+def prefill_transient_bytes(cfg, group: int, block_len: int, dtype,
+                            kv_dtype: str = "native") -> int:
+    """Per-chip transient of the *sharded* paged prefill write path: the
+    replicated (group, block_len) staged K/V block each chip scatters from
+    under the shard_map primitive — O(group·block), independent of the
+    pool width P.  The pre-unification GSPMD scatter could instead stage a
+    replicated O(P)-pool temporary (= ``P · page_kv_bytes``); benches and
+    the sharded tests compare the two measured ``temp_size_in_bytes``
+    against these analytic poles."""
+    return group * block_len * kv_position_bytes(cfg, dtype, kv_dtype)
+
+
 class CacheInvariantError(AssertionError):
     """Raised by ``PagedCache.verify`` when the allocator's host-side
     bookkeeping violates an invariant — the detection signal for silent
@@ -135,10 +147,13 @@ class MemoryStats:
     pages_total: int = 0      # usable pages (excludes scratch + failed chips)
     pages_in_use: int = 0
     pages_shared: int = 0     # pages with refcount > 1 (prefix sharing)
-    mesh_chips: int = 1       # devices the pool is kv_pages-sharded over
-    bytes_per_chip: int = 0   # pinned bytes each chip holds (= total / chips)
+    mesh_chips: int = 1       # chips the pool is partitioned over (device
+    #                           mesh OR the mesh-free locality_chips harness)
+    bytes_per_chip: int = 0   # pinned bytes each chip holds (= total / chips,
+    #                           int8 scale shards included via page_kv_bytes)
     kv_dtype: str = "native"  # page element format ("native" / "int8")
     bytes_scales: int = 0     # portion of bytes_total pinned by int8 scales
+    bytes_scales_per_chip: int = 0   # each chip's sharded scale-array bytes
     chips_failed: int = 0     # chips drained by fail_chip (degraded pool)
     # footprint pages charged per tenant (multi-tenant serving; empty when
     # requests carry no tenant tag)
@@ -207,6 +222,7 @@ class ContiguousCache:
     decode_impl = "gather"      # dense rows have no page table to resolve
     mesh = None                 # dense rows have no kv_pages dim to shard
     kv_axis = "model"
+    dp_axis = None
     kv_dtype = "native"         # int8 pages are a paged-format feature
     quantized = False
     last_deny = None            # alloc never fails -> never a deny reason
@@ -305,7 +321,7 @@ class PagedCache:
     def __init__(self, lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefix_sharing: bool = True, decode_impl: str = "gather",
-                 mesh=None, kv_axis: str = "model",
+                 mesh=None, kv_axis: str = "model", dp_axis=None,
                  locality_chips: Optional[int] = None,
                  kv_dtype: str = "native"):
         cfg = lm.cfg
@@ -326,13 +342,22 @@ class PagedCache:
             num_pages = batch * self.max_pages + 1
         assert num_pages >= 2, "need at least scratch + one usable page"
         self.mesh, self.kv_axis = mesh, kv_axis
+        self.dp_axis = dp_axis
         if mesh is not None:
             from repro.parallel.mesh import mesh_axis_size
             assert locality_chips is None, (
                 "locality_chips is the mesh-free testing knob; with a mesh "
                 "the chip count is the kv_axis extent")
+            # 2-D batch × pages meshes: the pool shards over kv_axis only
+            # (replicated across dp_axis); dp shards the dispatch batch dims
             self.chips = mesh_axis_size(mesh, kv_axis)
+            if dp_axis is not None:
+                assert dp_axis != kv_axis, (
+                    "dp_axis and kv_axis must be distinct mesh axes")
+                assert mesh_axis_size(mesh, dp_axis) >= 1
         else:
+            assert dp_axis is None, (
+                "dp_axis shards dispatch batch dims over a mesh; pass mesh=")
             # locality_chips simulates the per-chip free-list partitioning
             # without device sharding (host-side allocator tests)
             self.chips = locality_chips or 1
@@ -746,15 +771,42 @@ class PagedCache:
 
         kv_block: per-layer (L, n, Sblk, ...) K/V; dest: (n, Sblk) flat pool
         indices (page * page_size + row, scratch-routed where masked).  On a
-        sharded pool the result is constrained back to the ``kv_pages``
-        sharding so the prefill dispatch doesn't leave a replicated pool
-        behind (GSPMD partitions the scatter itself).
+        sharded pool the write routes through the unified shard_map
+        primitive (``repro.parallel.pagedkv.sharded_write_prefill``): each
+        chip commits only its own rows with a ``mode="drop"`` local
+        scatter, so the dispatch's per-chip transient is the O(group·block)
+        staged K/V — never an O(P) replicated pool (the pre-unification
+        GSPMD path is kept measurable as ``gspmd_write_prefill``).
 
         Quantized pools (``kv_dtype="int8"``): the float K/V block is
         quantized here — inside the staged (jit-traced) write, so prefill
         stays one dispatch — and the per-row scales scatter into the scale
         arrays through the *same* flat indices (a scale array is just a
         pool with no D axis)."""
+        kv_block = self._quantize_block(kv_block)
+        if self.mesh is not None:
+            from repro.parallel.pagedkv import sharded_write_prefill
+            return sharded_write_prefill(self.mesh, self.kv_axis, layers,
+                                         kv_block, dest)
+
+        def write(pool, small):
+            p, pg = pool.shape[1], pool.shape[2]
+            flat = pool.reshape(pool.shape[0], p * pg, *pool.shape[3:])
+            flat = flat.at[:, dest].set(small.astype(pool.dtype))
+            return flat.reshape(pool.shape)
+
+        return jax.tree.map(write, layers, kv_block)
+
+    def gspmd_write_prefill(self, layers, kv_block, dest):
+        """The pre-unification sharded prefill write: a flat global
+        ``.at[:, dest].set`` left to GSPMD to partition, constrained back
+        to the pool sharding.  Kept ONLY as the measured baseline for the
+        replicated-pool-transient comparison (bench/tests compile both
+        writes and diff ``temp_size_in_bytes``); the engine always routes
+        through the shard_map primitive above."""
+        assert self.mesh is not None, "the GSPMD baseline is mesh-only"
+        kv_block = self._quantize_block(kv_block)
+
         def write(pool, small):
             p, pg = pool.shape[1], pool.shape[2]
             flat = pool.reshape(pool.shape[0], p * pg, *pool.shape[3:])
@@ -762,18 +814,21 @@ class PagedCache:
             out = flat.reshape(pool.shape)
             sharding = (self._pool_sharding if pool.ndim == 5
                         else self._scale_sharding)
-            if sharding is not None:
-                out = jax.lax.with_sharding_constraint(out, sharding)
-            return out
+            return jax.lax.with_sharding_constraint(out, sharding)
 
-        if self.quantized:
-            from repro.kernels.quant import quantize_kv
-            block = {}
-            for name in ("k", "v"):
-                q, s = quantize_kv(kv_block[name])
-                block[name], block[name + "_scale"] = q, s
-            kv_block = block
         return jax.tree.map(write, layers, kv_block)
+
+    def _quantize_block(self, kv_block):
+        """int8 pools: quantize a staged float K/V block (inside the jit
+        trace) into the {k, v, k_scale, v_scale} tree the pool expects."""
+        if not self.quantized:
+            return kv_block
+        from repro.kernels.quant import quantize_kv
+        block = {}
+        for name in ("k", "v"):
+            q, s = quantize_kv(kv_block[name])
+            block[name], block[name + "_scale"] = q, s
+        return block
 
     def write_prefill(self, slot: int, kv_block) -> None:
         block_len = jax.tree.leaves(kv_block)[0].shape[2]
@@ -988,10 +1043,17 @@ class PagedCache:
 
     # ------------------------------------------------------------- stats ----
     def memory_stats(self) -> MemoryStats:
+        # self.chips covers BOTH partition modes — a device mesh and the
+        # mesh-free locality_chips harness — so the --mesh and fault-drain
+        # memory lines report the real per-chip split either way (the old
+        # `chips if mesh else 1` reported a locality-partitioned pool as
+        # one unsharded chip).  page_kv_bytes includes the int8 scale
+        # bytes, so bytes_per_chip counts each chip's sharded scale arrays
+        # too; bytes_scales_per_chip breaks that portion out.
         pb = page_kv_bytes(self.cfg, self.page, self.dtype, self.kv_dtype)
         usable = self.usable_pages()
         in_use = usable - self._free_count()
-        sharded = self.chips if self.mesh is not None else 1
+        sharded = self.chips
         scale_b = (self.P * self.page * 2 * self.cfg.num_layers
                    * self.cfg.num_kv_heads * SCALE_BYTES
                    if self.quantized else 0)
@@ -1003,6 +1065,7 @@ class PagedCache:
             pages_shared=int((self._ref > 1).sum()),
             mesh_chips=sharded, bytes_per_chip=self.P * pb // sharded,
             kv_dtype=self.kv_dtype, bytes_scales=scale_b,
+            bytes_scales_per_chip=scale_b // sharded,
             chips_failed=len(self._failed_chips),
             tenant_pages=dict(self._tenant_pages))
 
@@ -1013,7 +1076,8 @@ def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
                backend: str = "contiguous", page_size: int = 16,
                num_pages: Optional[int] = None, prefix_sharing: bool = True,
                decode_impl: str = "gather", mesh=None,
-               kv_axis: str = "model", kv_dtype: str = "native",
+               kv_axis: str = "model", dp_axis=None,
+               kv_dtype: str = "native",
                locality_chips: Optional[int] = None):
     """Build a KV-cache backend for ``lm`` (the ``lm.init_cache(backend=...)``
     entry point).  ``decode_impl`` ("gather" / "pallas") rides on the paged
@@ -1056,6 +1120,7 @@ def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
                           page_size=page_size, num_pages=num_pages,
                           prefix_sharing=prefix_sharing,
                           decode_impl=decode_impl, mesh=mesh,
-                          kv_axis=kv_axis, kv_dtype=kv_dtype,
+                          kv_axis=kv_axis, dp_axis=dp_axis,
+                          kv_dtype=kv_dtype,
                           locality_chips=locality_chips)
     raise ValueError(f"unknown KV-cache backend {backend!r}")

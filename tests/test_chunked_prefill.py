@@ -297,6 +297,13 @@ def test_chunked_prefix_sharing_registers_only_landed_pages():
 
 
 def test_chunked_engine_constructor_validation():
+    """One assertion per row of the chunked-prefill capability matrix.
+    Since the unified shard_map primitive, ``mesh=`` is NOT a chunking
+    offence — the last case proves a chunked engine constructs on a mesh —
+    and ``--prefill-chunk --mesh --cache-backend contiguous`` reports the
+    contiguous/mesh conflict (cache construction precedes chunk
+    validation), not a chunking error."""
+    from repro.parallel.mesh import make_mesh
     cfg, lm, params = small_lm()
     with pytest.raises(ValueError, match="page-aware"):
         ServeEngine(lm, params, max_batch=2, max_seq=32,
@@ -316,6 +323,50 @@ def test_chunked_engine_constructor_validation():
     with pytest.raises(ValueError, match="capacity"):
         ServeEngine(LM(moe_cfg), None, max_batch=2, max_seq=32,
                     cache_backend="paged", prefill_chunk=8)
+    # VLM image-embed prefixes prefill whole-prompt only
+    vlm_cfg = dataclasses.replace(CONFIGS["internvl2-2b"].reduced(),
+                                  dtype="float32", num_layers=2)
+    with pytest.raises(ValueError, match="token prompts"):
+        ServeEngine(LM(vlm_cfg), None, max_batch=2, max_seq=64,
+                    cache_backend="paged", prefill_chunk=8)
+    mesh = make_mesh((1,), ("model",))
+    # contiguous + mesh + chunk: first offence is the contiguous layout's
+    # missing page dim, raised at cache construction before any chunk check
+    with pytest.raises(ValueError, match="page dim"):
+        ServeEngine(lm, params, max_batch=2, max_seq=32,
+                    cache_backend="contiguous", mesh=mesh, prefill_chunk=8)
+    # paged + mesh + chunk constructs: chunking is mesh-clean now
+    eng = ServeEngine(lm, params, max_batch=2, max_seq=32,
+                      cache_backend="paged", mesh=mesh, prefill_chunk=8)
+    assert eng.chunk == 8 and eng.kv.mesh is mesh
+
+
+def test_chunked_stream_parity_on_one_chip_mesh():
+    """Tier-1 (single-device) coverage of the sharded chunk path: a
+    mesh=(1,) chunked engine routes every chunk through
+    ``sharded_prefill_chunk_attention`` — local scatter, C-row partials,
+    (trivial) merge — and must emit bitwise the mesh-free engine's
+    streams."""
+    from repro.parallel.mesh import make_mesh
+    cfg, lm, params = small_lm()
+    rng = np.random.default_rng(13)
+    reqs = [(i, rng.integers(0, cfg.vocab_size,
+                             int(rng.integers(2, 14))).astype(np.int32),
+             int(rng.integers(3, 6))) for i in range(6)]
+
+    def run(mesh=None):
+        eng = ServeEngine(lm, params, max_batch=4, max_seq=32,
+                          cache_backend="paged", page_size=4, num_pages=16,
+                          mesh=mesh, prefill_chunk=4)
+        for i, p, n in reqs:
+            eng.submit(Request(i, p.copy(), max_new_tokens=n))
+        eng.run_until_drained()
+        return eng
+
+    base = run()
+    eng = run(make_mesh((1,), ("model",)))
+    assert _streams(eng) == _streams(base)
+    assert eng.reg.counter("serve_prefill_chunks_total").get() > 0
 
 
 def test_stalled_prefill_gets_freed_pages_before_new_admissions():

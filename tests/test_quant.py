@@ -136,6 +136,7 @@ if HAVE_HYPOTHESIS:
         zero_rows = (x == 0).all(axis=-1)
         assert (y[zero_rows] == 0).all()
 else:                                       # pragma: no cover
-    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev)")
     def test_quantize_kv_error_bound_property():
-        ...
+        # importorskip (not a hard @skip): the test self-resurrects the
+        # moment hypothesis lands, instead of staying skipped forever
+        pytest.importorskip("hypothesis")
