@@ -6,9 +6,9 @@
 
 PY ?= python
 
-.PHONY: test test-multidevice test-all smoke bench bench-serve \
+.PHONY: test test-fast test-multidevice test-all smoke bench bench-serve \
 	bench-decode bench-sharded bench-chunked bench-quant bench-tenant \
-	bench-faults docs-check dev-deps
+	bench-faults bench-offload docs-check dev-deps
 
 # tier-1: the fast single-process suite.  The multi-device subprocess
 # files are split into `test-multidevice` (their own CI job) so this —
@@ -16,6 +16,14 @@ PY ?= python
 # runs everything (what a bare `pytest -x -q` collects)
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q \
+		--ignore=tests/test_parallel_multidevice.py \
+		--ignore=tests/test_serve_sharded.py
+
+# local fast loop: tier-1 minus the `slow`-marked nightly-style tests
+# (the cross-backend conformance matrix and the 10x working-set soak) —
+# CI and `make test` still run them
+test-fast:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow" \
 		--ignore=tests/test_parallel_multidevice.py \
 		--ignore=tests/test_serve_sharded.py
 
@@ -99,6 +107,17 @@ bench-tenant:
 bench-faults:
 	PYTHONPATH=src:. $(PY) -c "from benchmarks import bench_serving; \
 	[print(f'{n},{u:.1f},{d}') for n, u, d in bench_serving.run_faults()]"
+
+# host-offload tier benchmark: prefix-hit TTFT vs recompute (a 480-token
+# shared prefix prefetched from the persistent PrefixStore and its
+# fully-landed chunks skipped — asserted >= 3x faster), plus the
+# sustained-concurrency soak at a working set 10x the HBM page pool
+# (zero OOMs, bounded page gauge, streams bitwise identical to the
+# no-offload oracle); JSON lands in benchmarks/out/host_offload.json and
+# one trajectory entry is appended to the committed BENCH_serving.json
+bench-offload:
+	PYTHONPATH=src:. $(PY) -c "from benchmarks import bench_serving; \
+	[print(f'{n},{u:.1f},{d}') for n, u, d in bench_serving.run_offload()]"
 
 # documentation gate: every relative link in tracked *.md files must
 # resolve, and docs/telemetry.md must list exactly the metrics the engine

@@ -26,14 +26,15 @@ import numpy as np
 
 from repro.configs import CONFIGS
 from repro.models import LM
-from repro.serve import (FaultEvent, FaultPlan, PriorityClass, Request,
-                         SamplingParams, ServeEngine, TenancyConfig,
+from repro.serve import (FaultEvent, FaultPlan, PrefixStore, PriorityClass,
+                         Request, SamplingParams, ServeEngine, TenancyConfig,
                          TenantSpec, contiguous_kv_bytes,
                          decode_transient_bytes, make_cache, page_kv_bytes,
                          prefill_transient_bytes)
 from repro.serve.engine import sample_token
 
 OUT_JSON = Path(__file__).resolve().parent / "out" / "decode_transient.json"
+OFFLOAD_JSON = Path(__file__).resolve().parent / "out" / "host_offload.json"
 SHARDED_JSON = Path(__file__).resolve().parent / "out" / "sharded_serving.json"
 CHUNKED_JSON = Path(__file__).resolve().parent / "out" / "chunked_prefill.json"
 QUANT_JSON = Path(__file__).resolve().parent / "out" / "quant_kv.json"
@@ -1084,6 +1085,201 @@ def run_tenant():
          f"no-contention baseline {solo_p99:.1f}ms; non-preempted streams "
          f"bitwise identical sched vs fifo"),
     ]
+
+def run_offload():
+    """Host-offload page tier + persistent prefix store benchmark
+    (``make bench-offload``), in two phases:
+
+    * **Prefix-hit TTFT vs recompute** — a 480-token shared prefix served
+      through chunked prefill (15 chunks of 32).  Cold: a fresh prefix
+      recomputes every chunk.  Warm: a *second engine* sharing the same
+      :class:`PrefixStore` (persistence across engine lifetimes is the
+      point) hash-hits the prefix at admission, prefetches all 30 pages
+      from host RAM, and skips every fully-landed chunk's forward — only
+      the final (sampling) chunk dispatches.  Asserts warm TTFT >= 3x
+      faster than cold and that the warm stream is bitwise the cold one.
+    * **Sustained concurrency at 10x working set** — 20 distinct 3-page
+      prefixes (60 warm pages) revisited through a random schedule
+      against a 6-usable-page HBM pool with a 64-page host tier: the
+      engine must drain with zero OOMs (every admission banker-safe,
+      ``serve_kv_pages_in_use`` bounded by the pool at every step) and
+      emit byte-identical streams vs a no-offload contiguous oracle.
+
+    JSON lands in ``benchmarks/out/host_offload.json`` plus one entry in
+    the committed ``BENCH_serving.json``."""
+    cfg = dataclasses.replace(CONFIGS["llama3.2-3b"].reduced(),
+                              dtype="float32", num_layers=2)
+    lm = LM(cfg)
+    params = lm.init(jax.random.key(0))
+
+    # ---- phase 1: prefix-hit TTFT vs recompute ----
+    max_batch, max_seq, page, chunk = 4, 512, 16, 32
+    plen, tail_len, new_tokens = 480, 4, 6
+    rng = np.random.default_rng(17)
+    store = PrefixStore(128)     # 30 pages/prefix: warmup + 3 cold + slack
+
+    def engine():
+        return ServeEngine(lm, params, max_batch, max_seq,
+                           cache_backend="paged", page_size=page,
+                           prefill_chunk=chunk, prefix_store=store)
+
+    def prompt(prefix):
+        return np.concatenate(
+            [prefix, rng.integers(0, cfg.vocab_size,
+                                  tail_len).astype(np.int32)])
+
+    def serve_one(eng, rid, p):
+        eng.submit(Request(rid, p.copy(), max_new_tokens=new_tokens))
+        n_done = len(eng.finished)
+        while len(eng.finished) == n_done:
+            eng.step()
+        eng.kv.drain_offloads()       # prefix lands in the store NOW
+        r = eng.finished[-1]
+        return r.first_token_at - r.submitted_at, tuple(r.out_tokens)
+
+    prefixes = [rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+                for _ in range(4)]
+    cold_eng = engine()
+    serve_one(cold_eng, 0, prompt(prefixes[0]))      # warm: pays every jit
+    cold, cold_streams = [], []
+    measured = [prompt(pre) for pre in prefixes[1:]]
+    for k, p in enumerate(measured):                 # fresh prefixes: recompute
+        t, s = serve_one(cold_eng, 1 + k, p)
+        cold.append(t)
+        cold_streams.append(s)
+    chunks_cold = cold_eng.reg.counter("serve_prefill_chunks_total").get()
+    assert chunks_cold >= 4 * (plen // chunk), chunks_cold
+
+    warm_eng = engine()                   # NEW engine, same persistent store
+    serve_one(warm_eng, 0, prompt(prefixes[0]))      # warm jit via store hit
+    warm = []
+    for k, p in enumerate(measured):                 # same prompts: hash hits
+        t, s = serve_one(warm_eng, 1 + k, p)
+        warm.append(t)
+        assert s == cold_streams[k], "warm stream diverged from recompute"
+    ttft_cold = float(np.median(cold))
+    ttft_warm = float(np.median(warm))
+    speedup = ttft_cold / ttft_warm
+    assert speedup >= 3.0, (ttft_cold, ttft_warm)
+    skipped = warm_eng.reg.counter("serve_prefill_chunks_skipped_total").get()
+    assert skipped >= 4 * (plen // chunk - 1), skipped
+    wstats = warm_eng.kv.store.stats()
+    assert wstats["hits"] >= 4 * (plen // page), wstats
+    page_mb = store.tier.page_bytes / 2**20
+
+    # ---- phase 2: sustained concurrency at a 10x-pool working set ----
+    n_prefix, per_prefix, soak_page, soak_pages, host = 20, 2, 4, 7, 64
+    srng = np.random.default_rng(53)
+    soak_prefixes = [srng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+                     for _ in range(n_prefix)]
+    reqs = []
+    for i in range(n_prefix * per_prefix):
+        t = srng.integers(0, cfg.vocab_size,
+                          int(srng.integers(1, 3))).astype(np.int32)
+        reqs.append((i, np.concatenate([soak_prefixes[i % n_prefix], t]),
+                     int(srng.integers(2, 5))))
+    arrivals: Dict[int, list] = {}
+    for j in srng.permutation(len(reqs)):
+        arrivals.setdefault(int(srng.integers(0, 120)), []).append(reqs[j])
+
+    def soak(**kw):
+        eng = ServeEngine(lm, params, max_batch=4, max_seq=32, **kw)
+        paged = kw.get("cache_backend") == "paged"
+        gauge = eng.reg.gauge("serve_kv_pages_in_use")
+        pool = eng.kv.memory_stats().pages_total if paged else 0
+        peak, t0 = 0, time.perf_counter()
+        step = 0
+        while (step < 400 or eng.queue
+               or any(r is not None for r in eng.slot_req)):
+            for i, p, n in arrivals.get(step, []):
+                eng.submit(Request(i, p.copy(), max_new_tokens=n))
+            eng.step()
+            step += 1
+            assert step < 3000, "offload soak did not drain"
+            if paged:
+                g = gauge.get()
+                assert 0 <= g <= pool, "page gauge exceeded the HBM pool"
+                peak = max(peak, g)
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in eng.finished)
+        return ({r.id: tuple(r.out_tokens) for r in eng.finished},
+                eng, peak, toks / wall)
+
+    out, seng, peak, tok_s = soak(cache_backend="paged", page_size=soak_page,
+                                  num_pages=soak_pages, host_pages=host)
+    ref, _, _, _ = soak(cache_backend="contiguous")
+    assert out == ref and len(out) == len(reqs), \
+        "10x-working-set streams diverged from the no-offload oracle"
+    st = seng.kv.memory_stats()
+    sstats = seng.kv.store.stats()
+    working_set = n_prefix * 3          # 12-token prefixes, 4-token pages
+    ws_ratio = working_set / st.pages_total
+    assert ws_ratio >= 10.0, ws_ratio
+    assert sstats["hits"] > 0 and sstats["offloads"] > 0
+    assert st.pages_in_use == 0        # drained to zero, zero OOMs
+
+    records = {
+        "prefix_hit_ttft": {
+            "prefix_tokens": plen, "page_size": page,
+            "prefill_chunk": chunk, "repeats": len(measured),
+            "ttft_cold_ms": round(ttft_cold * 1e3, 2),
+            "ttft_warm_ms": round(ttft_warm * 1e3, 2),
+            "ttft_cold_ms_per_rep": [round(t * 1e3, 2) for t in cold],
+            "ttft_warm_ms_per_rep": [round(t * 1e3, 2) for t in warm],
+            "speedup": round(speedup, 2),
+            "chunks_skipped": int(skipped),
+            "store_hits": int(wstats["hits"]),
+            "page_bytes": store.tier.page_bytes,
+            "prefetch_mb": round(wstats["prefetch_bytes"] / 2**20, 3),
+            "stream_parity": True,
+        },
+        "working_set_10x": {
+            "requests": len(reqs), "distinct_prefixes": n_prefix,
+            "pool_pages": st.pages_total, "host_pages": host,
+            "working_set_pages": working_set,
+            "working_set_ratio": round(ws_ratio, 2),
+            "peak_pages_in_use": int(peak),
+            "host_pages_resident": st.host_pages_in_use,
+            "tok_s": round(tok_s, 1),
+            "store": {k: int(v) for k, v in sstats.items()},
+            "oom_events": 0, "stream_parity": True,
+        },
+    }
+    OFFLOAD_JSON.parent.mkdir(parents=True, exist_ok=True)
+    OFFLOAD_JSON.write_text(json.dumps(records, indent=1))
+    _append_trajectory({
+        "date": time.strftime("%Y-%m-%d"),
+        "bench": "host_offload",
+        "ttft_cold_ms": round(ttft_cold * 1e3, 2),
+        "ttft_warm_ms": round(ttft_warm * 1e3, 2),
+        "prefix_hit_ttft_speedup": round(speedup, 2),
+        "prefill_chunks_skipped": int(skipped),
+        "working_set_ratio": round(ws_ratio, 2),
+        "working_set_tok_s": round(tok_s, 1),
+        "host_prefetch_mb": round(
+            (wstats["prefetch_bytes"] + sstats["prefetch_bytes"]) / 2**20, 3),
+        "oom_events": 0,
+        "stream_parity": True,
+    })
+    return [
+        ("serving/offload_ttft_warm", ttft_warm * 1e6,
+         f"prefix-hit TTFT {ttft_warm * 1e3:.0f}ms vs "
+         f"{ttft_cold * 1e3:.0f}ms recompute (x{speedup:.1f}; "
+         f"{int(skipped)} chunk forwards skipped, "
+         f"{wstats['prefetch_bytes'] / 2**20:.1f}MB prefetched at "
+         f"{page_mb * 1024:.0f}kB/page)"),
+        ("serving/offload_working_set_10x", 0.0,
+         f"{len(reqs)} requests over {working_set} warm pages vs "
+         f"{st.pages_total}-page pool (x{ws_ratio:.1f} working set): "
+         f"0 OOMs, peak {int(peak)} pages, {tok_s:.1f} tok/s, "
+         f"streams bitwise identical to no-offload oracle"),
+        ("serving/offload_store_traffic", 0.0,
+         f"store: {int(sstats['offloads'])} offloads / "
+         f"{int(sstats['hits'])} hits / {int(sstats['evictions'])} LRU "
+         f"evictions in soak; {st.host_pages_in_use}/{host} host pages "
+         f"resident at drain"),
+    ]
+
 
 def run_faults():
     """Fault-injection recovery soak (``make bench-faults``): the same mixed

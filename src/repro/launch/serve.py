@@ -34,6 +34,12 @@ contiguous dense rows via ``--cache-backend contiguous``.
         # injected faults are detected by the fused step's non-finite
         # guard, quarantined streams resume *bitwise* via recompute-on-
         # resume prefill, and the summary reports per-stream outcomes
+    python -m repro.launch.serve --host-pages 64 --prefix-store \
+        --prefill-chunk 16   # hierarchical KV: cold shared prefixes
+        # spill to a 64-page host-RAM tier on their last free and
+        # prefetch back on a hash-hit instead of recomputing prefill;
+        # --prefix-store runs a warmup pass through a second engine
+        # sharing one persistent store, so the reported pass serves warm
 """
 from __future__ import annotations
 
@@ -180,7 +186,26 @@ def main():
                     help="debug mode: run the PagedCache.verify() "
                          "invariant sanitizer (refcounts, free lists, page "
                          "tables, quotas) after every engine iteration")
+    ap.add_argument("--host-pages", type=int, default=0, metavar="N",
+                    help="host-RAM page tier: cold shared prefix pages "
+                         "spill to N pinned host page buffers when their "
+                         "last device reference drops, and admissions that "
+                         "hash-hit the stored prefix prefetch the pages "
+                         "back instead of recomputing prefill (with "
+                         "--prefill-chunk, fully-covered chunks skip their "
+                         "forward entirely).  Requires --cache-backend "
+                         "paged and prefix sharing.  0 = off")
+    ap.add_argument("--prefix-store", action="store_true",
+                    help="persistent prefix store demo: serve the workload "
+                         "through a warmup engine first, then rebuild the "
+                         "engine REUSING the same store — the reported "
+                         "pass admits against a warm host tier, showing "
+                         "cross-engine prefix persistence.  Requires "
+                         "--host-pages")
     args = ap.parse_args()
+    if args.prefix_store and not args.host_pages:
+        raise SystemExit("--prefix-store persists the host tier across "
+                         "engines; size it with --host-pages N")
 
     import dataclasses
     cfg = get_config(args.arch)
@@ -217,33 +242,62 @@ def main():
     slack = SlackSink()
     alerts = AlertManager(reg, sinks=[slack, LogSink()],
                           rules=DEFAULT_RULES + SERVE_RULES)
-    eng = ServeEngine(lm, params, args.max_batch, args.max_seq,
-                      registry=reg,
-                      cache_backend=args.cache_backend,
-                      page_size=args.page_size, num_pages=args.num_pages,
-                      prefix_sharing=not args.no_prefix_sharing,
-                      decode_impl=args.decode_impl, mesh=mesh,
-                      kv_axis=args.mesh_axis, dp_axis=dp_axis,
-                      prefill_chunk=args.prefill_chunk,
-                      prefill_budget=args.prefill_budget,
-                      kv_dtype=args.kv_dtype, tenancy=tenancy,
-                      fault_plan=fault_plan,
-                      watchdog_iters=args.watchdog_iters,
-                      max_retries=args.max_retries,
-                      verify_cache=args.verify_cache, alerts=alerts)
+    store = None
+    if args.host_pages:
+        from repro.serve import PrefixStore
+        store = PrefixStore(args.host_pages)
+
+    def build_engine(registry, with_alerts=True):
+        return ServeEngine(lm, params, args.max_batch, args.max_seq,
+                           registry=registry,
+                           cache_backend=args.cache_backend,
+                           page_size=args.page_size,
+                           num_pages=args.num_pages,
+                           prefix_sharing=not args.no_prefix_sharing,
+                           decode_impl=args.decode_impl, mesh=mesh,
+                           kv_axis=args.mesh_axis, dp_axis=dp_axis,
+                           prefill_chunk=args.prefill_chunk,
+                           prefill_budget=args.prefill_budget,
+                           kv_dtype=args.kv_dtype, tenancy=tenancy,
+                           fault_plan=fault_plan,
+                           watchdog_iters=args.watchdog_iters,
+                           max_retries=args.max_retries,
+                           verify_cache=args.verify_cache,
+                           alerts=alerts if with_alerts else None,
+                           prefix_store=store)
 
     tenant_names = sorted(tenancy.tenants) if tenancy else []
-    rng = np.random.default_rng(0)
+
+    def submit_all(engine):
+        rng = np.random.default_rng(0)
+        for i in range(args.requests):
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  rng.integers(4, 12)).astype(np.int32)
+            engine.submit(Request(
+                i, prompt, max_new_tokens=args.new_tokens,
+                tenant=(tenant_names[i % len(tenant_names)]
+                        if tenant_names else "default"),
+                sampling=SamplingParams(
+                    temperature=args.temperature,
+                    top_k=args.top_k, top_p=args.top_p, seed=i)))
+
+    if args.prefix_store:
+        # warmup engine: same workload, own registry, SAME store — its
+        # freed prefixes offload to host and survive the engine teardown
+        warm = build_engine(MetricsRegistry(), with_alerts=False)
+        t0 = time.perf_counter()
+        submit_all(warm)
+        warm.run_until_drained(on_stuck="status")
+        cold_ttft = warm.reg.histogram(
+            "serve_ttft_seconds").quantile(0.5) * 1e3
+        print(f"warmup pass: {time.perf_counter()-t0:.1f}s, TTFT p50 "
+              f"{cold_ttft:.0f}ms, {store.pages_in_use()} prefix pages "
+              f"now host-resident; rebuilding engine on the warm store")
+        del warm
+
+    eng = build_engine(reg)
     t0 = time.perf_counter()
-    for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size,
-                              rng.integers(4, 12)).astype(np.int32)
-        eng.submit(Request(i, prompt, max_new_tokens=args.new_tokens,
-                           tenant=(tenant_names[i % len(tenant_names)]
-                                   if tenant_names else "default"),
-                           sampling=SamplingParams(
-                               temperature=args.temperature,
-                               top_k=args.top_k, top_p=args.top_p, seed=i)))
+    submit_all(eng)
     done = eng.run_until_drained(on_stuck="status")
     wall = time.perf_counter() - t0
     total_tokens = sum(len(r.out_tokens) for r in done)
@@ -287,6 +341,23 @@ def main():
               f"pages "
               f"({(st.bytes_total + saved)/max(st.bytes_total, 1):.2f}x "
               f"positions per byte)")
+    if args.host_pages:
+        hits = eng.reg.counter("serve_prefix_store_hits_total").get()
+        misses = eng.reg.counter("serve_prefix_store_misses_total").get()
+        off_b = eng.reg.counter("serve_host_offload_bytes_total").get()
+        pre_b = eng.reg.counter("serve_host_prefetch_bytes_total").get()
+        print(f"host tier [{args.host_pages} pages"
+              + (", persistent store" if args.prefix_store else "")
+              + f"]: {st.host_pages_in_use} resident "
+              f"({st.host_bytes/1e6:.2f} MB host RAM), "
+              f"{hits:.0f} page hits / {misses:.0f} misses, "
+              f"{off_b/1e6:.2f} MB offloaded, {pre_b/1e6:.2f} MB "
+              f"prefetched")
+        if args.prefill_chunk:
+            skipped = eng.reg.counter(
+                "serve_prefill_chunks_skipped_total").get()
+            print(f"  {skipped:.0f} fully-shared chunks skipped their "
+                  f"forward")
     if args.prefill_chunk:
         chunks = eng.reg.counter("serve_prefill_chunks_total").get()
         stalls = eng.reg.counter("serve_prefill_chunk_stalls_total").get()

@@ -107,7 +107,8 @@ class LM:
                    decode_impl: str = "gather",
                    mesh=None, kv_axis: str = "model", dp_axis=None,
                    kv_dtype: str = "native",
-                   locality_chips: Optional[int] = None):
+                   locality_chips: Optional[int] = None,
+                   host_pages: int = 0, prefix_store=None):
         """Decode cache construction.
 
         ``backend=None`` (train / dry-run) returns the raw dense pytree —
@@ -120,7 +121,9 @@ class LM:
         page pools P/n along the ``kv_pages`` logical axis -> ``kv_axis``
         mesh axis, padding the pool up to a multiple of the mesh size.
         ``kv_dtype="int8"`` (paged only) stores pages int8-quantized with
-        per-row fp32 scales (``repro.serve.kvcache``)."""
+        per-row fp32 scales (``repro.serve.kvcache``).  ``host_pages`` /
+        ``prefix_store`` (paged only) put a host-RAM offload tier behind
+        the pool (``repro.serve.offload``)."""
         if backend is not None:
             assert not abstract, "managed cache backends are concrete-only"
             from repro.serve.kvcache import make_cache
@@ -131,7 +134,9 @@ class LM:
                               decode_impl=decode_impl, mesh=mesh,
                               kv_axis=kv_axis, dp_axis=dp_axis,
                               kv_dtype=kv_dtype,
-                              locality_chips=locality_chips)
+                              locality_chips=locality_chips,
+                              host_pages=host_pages,
+                              prefix_store=prefix_store)
         assert kv_dtype == "native", (
             "int8 KV pages are a managed paged-backend format "
             "(init_cache(backend='paged', kv_dtype='int8'))")

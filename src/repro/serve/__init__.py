@@ -7,6 +7,7 @@ from repro.serve.kvcache import (CacheInvariantError, ContiguousCache,
                                  contiguous_kv_bytes,
                                  decode_transient_bytes, make_cache,
                                  page_kv_bytes, prefill_transient_bytes)
+from repro.serve.offload import HostPageTier, HostTierError, PrefixStore
 from repro.serve.sampling import filtered_probs, sample_batch
 from repro.serve.tenancy import (BATCH, INTERACTIVE, PriorityClass,
                                  TenancyConfig, TenantSpec, Victim,
@@ -18,6 +19,7 @@ __all__ = ["Request", "SamplingParams", "ServeEngine", "sample_token",
            "filtered_probs", "sample_batch", "KVCache", "ContiguousCache",
            "PagedCache", "MemoryStats", "make_cache", "contiguous_kv_bytes",
            "decode_transient_bytes", "page_kv_bytes",
-           "prefill_transient_bytes", "PriorityClass",
+           "prefill_transient_bytes", "HostPageTier", "HostTierError",
+           "PrefixStore", "PriorityClass",
            "INTERACTIVE", "BATCH", "TenantSpec", "TenancyConfig", "Victim",
            "next_victim"]

@@ -225,7 +225,8 @@ class ServeEngine:
                  watchdog_iters: int = 0, max_retries: int = 3,
                  verify_cache: bool = False, alerts=None,
                  health_every: int = 16,
-                 locality_chips: Optional[int] = None):
+                 locality_chips: Optional[int] = None,
+                 host_pages: int = 0, prefix_store=None):
         # per-slot positions rely on masked-then-overwritten cache writes,
         # which holds for attention KV caches but not recurrent state
         assert lm.cfg.family in ("dense", "moe", "vlm"), (
@@ -249,7 +250,12 @@ class ServeEngine:
                                 decode_impl=decode_impl, mesh=mesh,
                                 kv_axis=kv_axis, dp_axis=dp_axis,
                                 kv_dtype=kv_dtype,
-                                locality_chips=locality_chips)
+                                locality_chips=locality_chips,
+                                host_pages=host_pages,
+                                prefix_store=prefix_store)
+        # host-tier counter sync: the PrefixStore keeps monotonic totals;
+        # _export_memory publishes them as counter increments by delta
+        self._host_synced: Dict[str, int] = {}
         # fault injection + detection + recovery (repro.serve.faults): the
         # plan is polled once per step; all detection state is host-side
         self.fault_plan = fault_plan
@@ -435,6 +441,23 @@ class ServeEngine:
           buckets=(1, 2, 4, 8, 16, 32, 64, float("inf")))
         g("serve_streams_quarantined",
           "streams currently re-queued by fault recovery (awaiting resume)")
+        c("serve_prefill_chunks_skipped_total",
+          "prefill chunks whose forward was skipped because every position "
+          "was already backed by landed shared pages (device-shared or "
+          "prefetched from the host tier)")
+        c("serve_prefix_store_hits_total",
+          "prefix-store page lookups served from the host tier")
+        c("serve_prefix_store_misses_total",
+          "prefix-store page lookups that missed (cold, evicted, digest "
+          "collision, or quarantined-poisoned) and recomputed prefill")
+        c("serve_host_evictions_total",
+          "host-tier pages LRU-evicted to make room for newer prefixes")
+        c("serve_host_offload_bytes_total",
+          "wire bytes copied device->host by cold-prefix offload")
+        c("serve_host_prefetch_bytes_total",
+          "wire bytes copied host->device by prefix-hit prefetch")
+        g("serve_host_pages_in_use",
+          "prefix pages resident in the host-RAM tier's pinned buffers")
 
     # ---------------------------------------------------------- jit builds ----
     def _make_fused(self):
@@ -982,6 +1005,24 @@ class ServeEngine:
                     stalled.add(slot)
                     done_slots.add(slot)
                     continue
+                # fully-landed shared chunks skip their forward entirely:
+                # every position below st.shared is backed by pages whose
+                # content already landed (device prefix sharing, or a
+                # host-tier prefetch at admission), the chunk's writes
+                # would all scratch-route, and its logits are consumed
+                # only on the FINAL chunk — so a covered non-final chunk
+                # costs zero dispatches, zero budget.  This is where the
+                # prefix-hit TTFT win comes from: a fully warm prompt
+                # fast-forwards to its last chunk in one pass.
+                skipped = 0
+                while (st.done + self.chunk < plen
+                       and st.done + self.chunk <= st.shared):
+                    st.done += self.chunk
+                    skipped += 1
+                if skipped:
+                    self.reg.counter(
+                        "serve_prefill_chunks_skipped_total").inc(skipped)
+                    self._last_progress[slot] = self._iter
                 end = min(st.done + self.chunk, plen)
                 final = end == plen
                 cover = self._footprint(req) if final else end
@@ -1307,6 +1348,23 @@ class ServeEngine:
                 * (st.pages_total + 1)
             saved = dense_total - st.bytes_total
         self.reg.gauge("serve_kv_quant_bytes_saved").set(saved)
+        # host-RAM page tier: publish the store's monotonic totals as
+        # counter deltas (counters are engine-owned; the store may be
+        # shared across engines, so each engine syncs from its own mark)
+        self.reg.gauge("serve_host_pages_in_use").set(st.host_pages_in_use)
+        store = getattr(self.kv, "store", None)
+        if store is not None:
+            totals = store.stats()
+            for metric, key in (
+                    ("serve_prefix_store_hits_total", "hits"),
+                    ("serve_prefix_store_misses_total", "misses"),
+                    ("serve_host_evictions_total", "evictions"),
+                    ("serve_host_offload_bytes_total", "offload_bytes"),
+                    ("serve_host_prefetch_bytes_total", "prefetch_bytes")):
+                delta = totals[key] - self._host_synced.get(key, 0)
+                if delta:
+                    self.reg.counter(metric).inc(delta)
+                self._host_synced[key] = totals[key]
 
     def run_until_drained(self, max_iters: int = 10_000,
                           on_stuck: str = "raise") -> List[Request]:

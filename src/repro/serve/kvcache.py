@@ -158,6 +158,11 @@ class MemoryStats:
     # footprint pages charged per tenant (multi-tenant serving; empty when
     # requests carry no tenant tag)
     tenant_pages: Dict[str, int] = field(default_factory=dict)
+    # host-RAM page tier (PR 10): warm prefix pages resident in the
+    # PrefixStore's pinned host slabs — zero when the tier is off
+    host_pages_total: int = 0     # tier capacity (pages)
+    host_pages_in_use: int = 0    # prefix pages currently stored
+    host_bytes: int = 0           # wire bytes those pages pin in host RAM
 
 
 class KVCache(Protocol):
@@ -323,7 +328,8 @@ class PagedCache:
                  prefix_sharing: bool = True, decode_impl: str = "gather",
                  mesh=None, kv_axis: str = "model", dp_axis=None,
                  locality_chips: Optional[int] = None,
-                 kv_dtype: str = "native"):
+                 kv_dtype: str = "native", host_pages: int = 0,
+                 prefix_store=None):
         cfg = lm.cfg
         assert cfg.family in ("dense", "vlm", "moe"), (
             "paged KV is attention-cache families only "
@@ -432,6 +438,36 @@ class PagedCache:
         #: chips drained by ``fail_chip`` — their page-id ranges are dead:
         #: never listed free again, capacity permanently reduced
         self._failed_chips: set = set()
+        # ---- host-RAM page tier (repro.serve.offload) -------------------
+        # ``prefix_store`` is an externally-owned PrefixStore (persistent
+        # across engines: a warmup engine's evicted prefixes prefetch into
+        # a later engine's admissions); ``host_pages`` alone builds a
+        # store private to this cache.  The tier rides on prefix sharing —
+        # the store key IS the sharing key — so it requires it.
+        self.store = None
+        if prefix_store is not None or host_pages:
+            from repro.serve.offload import PrefixStore
+            assert prefix_sharing, (
+                "the host page tier stores pages under the prefix-sharing "
+                "key; construct the cache with prefix_sharing=True")
+            self.store = prefix_store if prefix_store is not None \
+                else PrefixStore(host_pages)
+            spec = {"k": (pool_shape[2:],
+                          jnp.int8 if self.quantized else dtype)}
+            spec["v"] = spec["k"]
+            if self.quantized:
+                spec["k_scale"] = (scale_shape[2:], jnp.float32)
+                spec["v_scale"] = spec["k_scale"]
+            # per-page payload: pool_shape is (L, P, page, KV, D) — a page
+            # slice drops the P dim, keeping the leading L
+            spec = {n: ((pool_shape[0],) + shape, dt)
+                    for n, (shape, dt) in spec.items()}
+            self.store.bind(spec)
+        #: device->host copies started by ``free`` but not yet landed in
+        #: the store — drained at the next admission/stats/verify point,
+        #: never on the decode hot path
+        self._pending_offload: List[tuple] = []
+        self._pending_keys: set = set()
 
     # ------------------------------------------------------------ sizing ----
     def pages_needed(self, length: int) -> int:
@@ -561,20 +597,114 @@ class PagedCache:
         return freed
 
     def _match_shared(self, prefix: Optional[np.ndarray], n_pages: int):
-        """Leading full prompt pages already registered (content landed) that
-        this request can share.  Returns (shared page ids, full-page count)."""
+        """Leading full prompt pages this request need not recompute.
+
+        Returns ``(shared, full, host_hits)``: ``shared`` are device pages
+        already registered (content landed) that the slot maps directly;
+        ``host_hits`` continue the run past the device-registered prefix
+        with pages resident in the host tier — ``(logical_idx, key,
+        payload)`` triples the caller prefetches into fresh device pages
+        after its admission check passes.  ``full`` is the shareable
+        full-page count.  Host payloads are finite-checked here: a
+        poisoned host page is quarantined (counted as a poisoned miss)
+        and the match run stops before it, so corrupt bytes can never
+        reach ``register_landed``."""
         shared: List[int] = []
+        host_hits: List[tuple] = []
         full = 0
         if self.prefix_sharing and prefix is not None:
             # only pages wholly covered by the prompt are shareable: the
             # page containing the first decode write must be private
             full = min(len(prefix) // self.page, n_pages)
-            for i in range(full):
+            i = 0
+            while i < full:
                 pid = self._hash_to_page.get(self._key(prefix, i))
                 if pid is None:
                     break
                 shared.append(pid)
-        return shared, full
+                i += 1
+            if self.store is not None and i < full:
+                self.drain_offloads()
+                while i < full:
+                    key = self._key(prefix, i)
+                    payload = self.store.lookup(key)
+                    if payload is None:
+                        break
+                    if not self._payload_finite(payload):
+                        self.store.quarantine(key)
+                        break
+                    host_hits.append((i, key, payload))
+                    i += 1
+        return shared, full, host_hits
+
+    @staticmethod
+    def _payload_finite(payload: Dict[str, np.ndarray]) -> bool:
+        """Prefetch-side corruption guard: every float array of the page's
+        wire payload must be finite (int8 payloads are unrepresentable as
+        NaN, so their fp32 scales carry the poison — same as on device)."""
+        return all(np.isfinite(np.asarray(a, np.float32)).all()
+                   for a in payload.values()
+                   if np.issubdtype(a.dtype, np.floating))
+
+    def _prefetch(self, host_hits: List[tuple], pids: List[int]) -> None:
+        """Land ``host_hits``'s payloads in the freshly-claimed device
+        pages ``pids`` (one batched ``.at[:, pids].set`` per payload
+        array) and register the keys — the content IS landed, so later
+        admissions in the same batch can device-share it immediately."""
+        assert len(host_hits) == len(pids)
+        if not host_hits:
+            return
+        idx = jnp.asarray(pids, jnp.int32)
+        layers = dict(self.state["layers"])
+        for name in layers:
+            block = np.stack([payload[name]
+                              for _, _, payload in host_hits], axis=1)
+            arr = layers[name].at[:, idx].set(
+                jnp.asarray(block, layers[name].dtype))
+            if self.mesh is not None:
+                sharding = (self._pool_sharding if arr.ndim == 5
+                            else self._scale_sharding)
+                arr = jax.device_put(arr, sharding)
+            layers[name] = arr
+        self.state = {**self.state, "layers": layers}
+        for (_, key, _), pid in zip(host_hits, pids):
+            self._hash_to_page[key] = pid
+            self._page_to_hash[pid] = key
+        self.store.note_prefetch(len(host_hits))
+
+    def _offload(self, key: bytes, pid: int) -> None:
+        """Start an async device->host copy of page ``pid`` under ``key``
+        (called by ``free`` as the last reference drops).  The page slice
+        is taken immediately — the pool buffer may be donated into the
+        next fused dispatch — but materialization to host numpy waits for
+        ``drain_offloads``, keeping the copy off the free/decode hot
+        path.  Pages the store already holds are only LRU-refreshed."""
+        if self.store.has(key) or key in self._pending_keys:
+            self.store.touch(key)
+            return
+        slices = {}
+        for name in self.state["layers"]:
+            a = self.state["layers"][name][:, pid]
+            try:
+                a.copy_to_host_async()
+            except (AttributeError, RuntimeError):
+                pass               # backend without async D2H: drain copies
+            slices[name] = a
+        self._pending_offload.append((key, slices))
+        self._pending_keys.add(key)
+
+    def drain_offloads(self) -> None:
+        """Materialize every pending device->host copy into the store.
+        Called before store lookups (so a just-freed prefix is hittable),
+        from ``memory_stats``/``verify`` (accounting covers in-flight
+        pages), and harmlessly when nothing is pending."""
+        if not self._pending_offload:
+            return
+        for key, slices in self._pending_offload:
+            self.store.put(key, {n: np.asarray(a)
+                                 for n, a in slices.items()})
+        self._pending_offload.clear()
+        self._pending_keys.clear()
 
     def alloc(self, slot: int, length: int,
               prefix: Optional[np.ndarray] = None,
@@ -600,12 +730,15 @@ class PagedCache:
         if not self._quota_ok(tenant, n_pages):
             self.last_deny = "quota"
             return None                      # tenant cap, not pool pressure
-        shared, full = self._match_shared(prefix, n_pages)
+        shared, full, host_hits = self._match_shared(prefix, n_pages)
         # bump shared refs before the safety check: a page going ref 1 -> 2
         # stops being freeable by its first owner's completion, and the
         # banker must see that (rolled back on deferral)
         for pid in shared:
             self._ref[pid] += 1
+        # prefetch-then-admit: host-tier hits still consume fresh DEVICE
+        # pages, so the banker sees the same demand as a cold request —
+        # only the recompute (prefill forward) is saved, never safety
         if not self._grant_safe(n_pages - len(shared), 0):
             for pid in shared:
                 self._ref[pid] -= 1
@@ -615,10 +748,15 @@ class PagedCache:
         for pid in fresh:
             self._ref[pid] = 1
         pages = shared + fresh
+        # admission granted: land the host tier's pages in the first
+        # host_hits fresh pages (their logical indices continue the
+        # device-shared run) and register them as landed content
+        self._prefetch(host_hits, fresh[:len(host_hits)])
+        covered = len(shared) + len(host_hits)
         # register this request's *new* full prompt pages so later identical
         # prefixes can share them (content lands in the same _admit step)
         if self.prefix_sharing and prefix is not None:
-            for i in range(len(shared), full):
+            for i in range(covered, full):
                 key = self._key(prefix, i)
                 if key not in self._hash_to_page:
                     self._hash_to_page[key] = pages[i]
@@ -627,9 +765,9 @@ class PagedCache:
         self.page_table[slot, :n_pages] = pages
         self._page_table_dev = None
         self._slot_pages[slot] = pages
-        self._slot_shared[slot] = len(shared)
+        self._slot_shared[slot] = covered
         self._charge(slot, tenant, n_pages)
-        return len(shared) * self.page
+        return covered * self.page
 
     # ------------------------------------------------- chunked allocation ----
     def alloc_chunked(self, slot: int, length: int, first: int,
@@ -660,8 +798,15 @@ class PagedCache:
         if not self._quota_ok(tenant, n_total):
             self.last_deny = "quota"
             return None
-        shared, _ = self._match_shared(prefix, n_total)
+        shared, _, host_hits = self._match_shared(prefix, n_total)
+        # prefetch-then-admit: host-tier hits are claimed (and landed) UP
+        # FRONT alongside the first chunk's pages — the chunks they cover
+        # will skip their forward entirely, so deferring the claim would
+        # only re-expose the recompute the tier exists to remove.  The
+        # banker check still guards the whole grant: an unsafe prefetch
+        # defers the admission exactly like an unsafe cold claim.
         n_first = max(self.pages_needed(first) - len(shared), 0)
+        n_first = max(n_first, len(host_hits))
         remaining = n_total - len(shared) - n_first
         for pid in shared:          # pre-check bump, as in ``alloc``
             self._ref[pid] += 1
@@ -674,14 +819,16 @@ class PagedCache:
         for pid in fresh:
             self._ref[pid] = 1
         pages = shared + fresh
+        self._prefetch(host_hits, fresh[:len(host_hits)])
+        covered = len(shared) + len(host_hits)
         self.page_table[slot, :] = 0
         self.page_table[slot, :len(pages)] = pages
         self._page_table_dev = None
         self._slot_pages[slot] = pages
-        self._slot_shared[slot] = len(shared)
+        self._slot_shared[slot] = covered
         self._slot_need[slot] = remaining
         self._charge(slot, tenant, n_total)
-        return len(shared) * self.page
+        return covered * self.page
 
     def extend(self, slot: int, cover: int) -> bool:
         """Grow ``slot``'s claimed pages to cover ``cover`` positions (the
@@ -883,6 +1030,14 @@ class PagedCache:
                 key = self._page_to_hash.pop(pid, None)
                 if key is not None:
                     del self._hash_to_page[key]
+                    # the page is about to be recycled but its content is
+                    # a registered (landed, uncorrupted-as-far-as-we-know)
+                    # shared prefix: spill it to the host tier so a later
+                    # hash-hitting admission prefetches instead of
+                    # recomputing prefill.  Poison-recovered pages never
+                    # get here — recovery unregisters them first.
+                    if self.store is not None:
+                        self._offload(key, pid)
                 chip = self._chip_of(pid)
                 # a failed chip's pages are gone, not recyclable: the last
                 # reference dropping is when the page leaves the pool
@@ -1040,6 +1195,18 @@ class PagedCache:
             # recovery case), so the check only applies to intact pools
             check(self._safe(len(free), self._banker_items()),
                   "pool not banker-safe (a live slot can never complete)")
+        if self.store is not None:
+            # host-resident pages: drain in-flight offloads so the store's
+            # own sanitizer sees the settled state, then cross-check the
+            # stats plumbing (store bytes must be wire-format page bytes)
+            self.drain_offloads()
+            self.store.verify()
+            check(st.host_pages_total == self.store.capacity
+                  and st.host_pages_in_use == self.store.pages_in_use()
+                  and st.host_bytes == self.store.bytes_in_use(),
+                  "memory_stats host-tier accounting drifted from store")
+            check(self.store.tier.page_bytes == pb,
+                  "host tier page bytes != device wire page bytes")
 
     # ------------------------------------------------------------- stats ----
     def memory_stats(self) -> MemoryStats:
@@ -1050,6 +1217,7 @@ class PagedCache:
         # one unsharded chip).  page_kv_bytes includes the int8 scale
         # bytes, so bytes_per_chip counts each chip's sharded scale arrays
         # too; bytes_scales_per_chip breaks that portion out.
+        self.drain_offloads()    # settle in-flight D2H so host stats are real
         pb = page_kv_bytes(self.cfg, self.page, self.dtype, self.kv_dtype)
         usable = self.usable_pages()
         in_use = usable - self._free_count()
@@ -1067,7 +1235,11 @@ class PagedCache:
             kv_dtype=self.kv_dtype, bytes_scales=scale_b,
             bytes_scales_per_chip=scale_b // sharded,
             chips_failed=len(self._failed_chips),
-            tenant_pages=dict(self._tenant_pages))
+            tenant_pages=dict(self._tenant_pages),
+            host_pages_total=self.store.capacity if self.store else 0,
+            host_pages_in_use=(self.store.pages_in_use()
+                               if self.store else 0),
+            host_bytes=self.store.bytes_in_use() if self.store else 0)
 
 
 # ------------------------------------------------------------- factory ----
@@ -1078,7 +1250,8 @@ def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
                decode_impl: str = "gather", mesh=None,
                kv_axis: str = "model", dp_axis=None,
                kv_dtype: str = "native",
-               locality_chips: Optional[int] = None):
+               locality_chips: Optional[int] = None,
+               host_pages: int = 0, prefix_store=None):
     """Build a KV-cache backend for ``lm`` (the ``lm.init_cache(backend=...)``
     entry point).  ``decode_impl`` ("gather" / "pallas") rides on the paged
     backend and tells decode consumers how to resolve the page table; the
@@ -1089,7 +1262,12 @@ def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
     dequantize-on-read in both decode impls.  ``locality_chips`` (paged,
     mesh-free) partitions the free list as an N-chip pool without device
     sharding — the host-side harness for per-chip locality and
-    chip-failure drain tests."""
+    chip-failure drain tests.  ``host_pages`` (paged, needs prefix
+    sharing) adds an N-page host-RAM tier: cold shared prefixes spill to
+    pinned host buffers on their last free and prefetch back on a later
+    hash-hit instead of recomputing prefill; ``prefix_store`` passes an
+    externally-owned ``repro.serve.offload.PrefixStore`` so the warm
+    prefix corpus persists across engine instances."""
     if backend == "contiguous":
         if locality_chips is not None:
             raise ValueError(
@@ -1110,6 +1288,12 @@ def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
                 "the int8 page format quantizes fixed-size pages with "
                 "per-row scales; the contiguous layout has no pages (use "
                 f"backend='paged' for kv_dtype={kv_dtype!r})")
+        if host_pages or prefix_store is not None:
+            raise ValueError(
+                "the host page tier offloads and prefetches fixed-size "
+                "pages under the prefix-sharing key; the contiguous "
+                "layout has neither (use backend='paged' for host_pages/"
+                "prefix_store)")
         return ContiguousCache(lm, batch, max_seq, dtype=dtype)
     if backend == "paged":
         if lm.is_encdec:
@@ -1122,5 +1306,6 @@ def make_cache(lm, batch: int, max_seq: int, dtype=jnp.bfloat16,
                           decode_impl=decode_impl, mesh=mesh,
                           kv_axis=kv_axis, dp_axis=dp_axis,
                           kv_dtype=kv_dtype,
-                          locality_chips=locality_chips)
+                          locality_chips=locality_chips,
+                          host_pages=host_pages, prefix_store=prefix_store)
     raise ValueError(f"unknown KV-cache backend {backend!r}")

@@ -1,0 +1,304 @@
+"""Host-RAM page tier + persistent prefix store behind ``PagedCache``.
+
+The paper's clusters tier storage so the expensive layer holds only the
+working set; the serving mirror is this module.  HBM holds the *hot* KV
+pages (live requests); warm shared prefixes — system prompts, few-shot
+templates, multi-turn histories — spill to preallocated ("pinned") host
+buffers when their last on-device reference drops, and are copied back
+instead of recomputed when a later admission hash-hits the same prefix.
+The host tier turns fixed HBM into the cache of a much larger prefix
+corpus: the bench sustains a working set ~10x the device pool.
+
+Two classes, strictly layered:
+
+* :class:`HostPageTier` — a dumb slab allocator over preallocated host
+  numpy arrays, one slab per pool payload array ("k", "v", and the int8
+  scale arrays when quantized).  Pages are stored in **wire format**:
+  an int8 pool's host pages stay int8 + fp32 scales, so a page costs the
+  same bytes in host RAM as in HBM and a prefetch is a byte-exact copy.
+* :class:`PrefixStore` — the persistent map from the allocator's prefix
+  key (the token bytes a page causally depends on) to a tier slot.  Keys
+  are indexed by a short digest but every entry stores the **full key
+  bytes**, verified on lookup: a digest collision is a recorded miss,
+  never silent cross-request KV reuse.  LRU eviction; the store outlives
+  any single cache/engine (pass one store to successive engines and the
+  second engine's admissions prefetch what the first one computed).
+
+The device side of the tier lives in ``PagedCache``: ``free()`` enqueues
+an async device->host copy when a *registered* page's refcount drops to
+zero (off the decode hot path — materialization happens at the next
+admission/stats point), and ``alloc``/``alloc_chunked`` probe the store
+for pages past the device-registered run, claiming fresh device pages
+and landing the host bytes before returning (prefetch-then-admit).
+Prefetched content is finite-checked here first: a poisoned host page
+(NaN payload or scales) is quarantined and reported as a miss, so
+corruption in the warm tier surfaces as recompute, never as a poisoned
+stream.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class HostTierError(AssertionError):
+    """Raised by ``PrefixStore.verify`` / ``HostPageTier.verify`` when the
+    host tier's bookkeeping violates an invariant (the host-side sibling
+    of ``CacheInvariantError``)."""
+
+
+class HostPageTier:
+    """Slab allocator over preallocated host page buffers.
+
+    ``capacity`` pages; ``bind(spec)`` fixes the per-page payload layout
+    (array name -> (shape, dtype)) on first use and asserts compatibility
+    on every later bind — a persistent store can only be reused by caches
+    with the identical page format.  Slabs are allocated eagerly at bind
+    time (the "pinned host buffers": one contiguous array per payload, no
+    per-page malloc on the offload path).
+    """
+
+    def __init__(self, capacity: int):
+        assert capacity >= 1, capacity
+        self.capacity = int(capacity)
+        self._spec: Optional[Dict[str, Tuple[tuple, np.dtype]]] = None
+        self._slabs: Dict[str, np.ndarray] = {}
+        self._free: List[int] = list(range(capacity - 1, -1, -1))
+        self._used: set = set()
+        self.page_bytes = 0            # wire bytes of one page's payload
+
+    def bind(self, spec: Dict[str, Tuple[tuple, object]]) -> None:
+        norm = {name: (tuple(shape), np.dtype(dt))
+                for name, (shape, dt) in spec.items()}
+        if self._spec is not None:
+            if norm != self._spec:
+                raise HostTierError(
+                    f"host tier bound to a different page format: "
+                    f"{self._spec} vs {norm} (a persistent prefix store is "
+                    f"reusable only across caches with identical page "
+                    f"shape/dtype)")
+            return
+        self._spec = norm
+        for name, (shape, dt) in norm.items():
+            self._slabs[name] = np.zeros((self.capacity, *shape), dt)
+        self.page_bytes = sum(
+            int(np.prod(shape)) * dt.itemsize for shape, dt in norm.values())
+
+    @property
+    def bound(self) -> bool:
+        return self._spec is not None
+
+    def in_use(self) -> int:
+        return len(self._used)
+
+    def alloc_slot(self) -> Optional[int]:
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._used.add(slot)
+        return slot
+
+    def free_slot(self, slot: int) -> None:
+        assert slot in self._used, slot
+        self._used.discard(slot)
+        self._free.append(slot)
+
+    def write(self, slot: int, arrays: Dict[str, np.ndarray]) -> None:
+        assert slot in self._used, slot
+        assert set(arrays) == set(self._slabs), (
+            set(arrays), set(self._slabs))
+        for name, a in arrays.items():
+            self._slabs[name][slot] = a
+
+    def read(self, slot: int) -> Dict[str, np.ndarray]:
+        assert slot in self._used, slot
+        return {name: slab[slot] for name, slab in self._slabs.items()}
+
+    def verify(self) -> None:
+        if sorted(self._free + list(self._used)) != list(range(self.capacity)):
+            raise HostTierError(
+                "host tier free/used slots do not partition the slab")
+
+
+@dataclass
+class _Entry:
+    key: bytes          # FULL prefix key bytes — verified on every lookup
+    slot: int           # tier slab slot holding the page payload
+
+
+class PrefixStore:
+    """Digest-indexed, collision-verified, LRU host store of prefix pages.
+
+    The key is ``PagedCache._key``'s token-prefix bytes — the complete
+    causal input of the page's K/V content — so a verified key match means
+    the stored bytes ARE the page a recomputed prefill would produce.
+    ``lookup`` verifies the full key against the entry before returning
+    (digest collisions count in ``stats()["collisions"]`` and miss); a
+    consumer that finds the payload non-finite calls ``quarantine`` which
+    drops the entry and reclassifies the hit as a poisoned miss.
+    """
+
+    #: digest width (bytes) of the index key.  Kept short deliberately —
+    #: collision handling must be *correct*, not statistically unreachable
+    #: (tests shrink it to 1 to force collisions).
+    digest_size = 16
+
+    def __init__(self, host_pages: int):
+        self.tier = HostPageTier(host_pages)
+        self._entries: "OrderedDict[bytes, _Entry]" = OrderedDict()
+        self._stats = {"hits": 0, "misses": 0, "collisions": 0,
+                       "evictions": 0, "poisoned": 0, "offloads": 0,
+                       "offload_bytes": 0, "prefetch_bytes": 0}
+
+    # ------------------------------------------------------------- keys ----
+    def _digest(self, key: bytes) -> bytes:
+        return hashlib.blake2b(key, digest_size=self.digest_size).digest()
+
+    # ------------------------------------------------------------ sizing ----
+    @property
+    def capacity(self) -> int:
+        return self.tier.capacity
+
+    def pages_in_use(self) -> int:
+        return len(self._entries)
+
+    def bytes_in_use(self) -> int:
+        return len(self._entries) * self.tier.page_bytes
+
+    def bytes_total(self) -> int:
+        return self.tier.capacity * self.tier.page_bytes
+
+    def bind(self, spec) -> None:
+        self.tier.bind(spec)
+
+    # -------------------------------------------------------------- ops ----
+    def has(self, key: bytes) -> bool:
+        """Key present (full-key verified)?  No stats side effects — this
+        is the offload path's dedup probe, not a serving lookup."""
+        e = self._entries.get(self._digest(key))
+        return e is not None and e.key == key
+
+    def touch(self, key: bytes) -> None:
+        d = self._digest(key)
+        e = self._entries.get(d)
+        if e is not None and e.key == key:
+            self._entries.move_to_end(d)
+
+    def put(self, key: bytes, arrays: Dict[str, np.ndarray]) -> None:
+        """Store (or refresh) ``key``'s page payload, LRU-evicting to make
+        room.  A digest collision on put replaces the resident entry — the
+        store is a cache, and the full-key check on lookup keeps either
+        choice correct; replacing favours recency."""
+        d = self._digest(key)
+        e = self._entries.get(d)
+        if e is not None:
+            if e.key == key:
+                self._entries.move_to_end(d)     # already stored: refresh
+                return
+            self._stats["collisions"] += 1
+            self._evict_digest(d)
+        slot = self.tier.alloc_slot()
+        if slot is None:
+            self._evict_digest(next(iter(self._entries)))   # LRU victim
+            self._stats["evictions"] += 1
+            slot = self.tier.alloc_slot()
+            assert slot is not None
+        self.tier.write(slot, {n: np.asarray(a) for n, a in arrays.items()})
+        self._entries[d] = _Entry(key=key, slot=slot)
+        self._stats["offloads"] += 1
+        self._stats["offload_bytes"] += self.tier.page_bytes
+
+    def lookup(self, key: bytes) -> Optional[Dict[str, np.ndarray]]:
+        """Page payload for ``key``, or ``None`` (counted miss).  A digest
+        hit with a different full key is a collision AND a miss — never
+        another prefix's bytes."""
+        d = self._digest(key)
+        e = self._entries.get(d)
+        if e is None:
+            self._stats["misses"] += 1
+            return None
+        if e.key != key:
+            self._stats["collisions"] += 1
+            self._stats["misses"] += 1
+            return None
+        self._stats["hits"] += 1
+        self._entries.move_to_end(d)
+        return self.tier.read(e.slot)
+
+    def note_prefetch(self, n_pages: int) -> None:
+        """Count ``n_pages`` host->device page copies that actually landed
+        (called by the cache after the device write, so a lookup whose
+        admission was then denied never counts prefetch bytes)."""
+        self._stats["prefetch_bytes"] += n_pages * self.tier.page_bytes
+
+    def quarantine(self, key: bytes) -> None:
+        """Drop ``key`` after its payload failed the consumer's finite
+        check: the lookup hit stands (monotonic counters) but a miss and
+        a poisoned-drop are recorded too — telemetry shows corruption as
+        recompute pressure — and the bytes can never be served again."""
+        d = self._digest(key)
+        e = self._entries.get(d)
+        if e is not None and e.key == key:
+            self._evict_digest(d)
+        self._stats["misses"] += 1
+        self._stats["poisoned"] += 1
+
+    def drop(self, key: bytes) -> None:
+        d = self._digest(key)
+        e = self._entries.get(d)
+        if e is not None and e.key == key:
+            self._evict_digest(d)
+
+    def _evict_digest(self, d: bytes) -> None:
+        e = self._entries.pop(d)
+        self.tier.free_slot(e.slot)
+
+    # ------------------------------------------------------------ faults ----
+    def poison(self, key: bytes) -> bool:
+        """Overwrite ``key``'s stored payload with non-finite values (the
+        host-resident arm of the ``poison_page`` fault seam).  Float
+        payloads get NaN directly; int8 payloads have no NaN encoding so
+        the fp32 scale rows are poisoned, exactly as on device.  Returns
+        whether the key was resident."""
+        e = self._entries.get(self._digest(key))
+        if e is None or e.key != key:
+            return False
+        arrays = self.tier.read(e.slot)
+        floats = {n: a for n, a in arrays.items()
+                  if np.issubdtype(a.dtype, np.floating)}
+        assert floats, "page payload has no float arrays to poison"
+        for a in floats.values():
+            a[...] = np.nan        # slab views: writes land in the tier
+        return True
+
+    # ------------------------------------------------------------- state ----
+    def stats(self) -> Dict[str, int]:
+        return dict(self._stats)
+
+    def keys(self) -> List[bytes]:
+        return [e.key for e in self._entries.values()]
+
+    def verify(self) -> None:
+        """Host-tier invariant sanitizer (called from
+        ``PagedCache.verify``): entries fit capacity, tier slots are owned
+        exactly once and by the entry that claims them, and every index
+        digest matches its entry's full key."""
+        def check(cond, what):
+            if not cond:
+                raise HostTierError(f"PrefixStore.verify: {what}")
+
+        check(len(self._entries) <= self.tier.capacity,
+              "more store entries than tier capacity")
+        slots = [e.slot for e in self._entries.values()]
+        check(len(slots) == len(set(slots)),
+              "two store entries share a tier slot")
+        check(set(slots) == self.tier._used,
+              "store entries and tier used-slots disagree")
+        for d, e in self._entries.items():
+            check(self._digest(e.key) == d,
+                  "store index digest does not match entry key")
+        self.tier.verify()

@@ -41,38 +41,6 @@ def _streams(eng):
 
 # ------------------------------------------------- token-stream parity ----
 
-def test_chunked_stream_parity_across_chunk_sizes():
-    """Chunk sizes 4 (== the bucket of the length-4 prompt), 5 (divides no
-    prompt length), and 16 (== the bucket of the length-16 prompt, and
-    bigger than most prompts) must all emit exactly the whole-prompt
-    engine's greedy streams."""
-    cfg, lm, params = small_lm()
-    rng = np.random.default_rng(5)
-    lens = [4, 7, 16, 23, 5, 12]
-    reqs = [(i, rng.integers(0, cfg.vocab_size, n).astype(np.int32),
-             int(rng.integers(3, 7))) for i, n in enumerate(lens)]
-
-    def run(**kw):
-        eng = ServeEngine(lm, params, max_batch=4, max_seq=64,
-                          cache_backend="paged", page_size=8, **kw)
-        for i, p, n in reqs:
-            eng.submit(Request(i, p.copy(), max_new_tokens=n))
-        eng.run_until_drained()
-        return eng
-
-    base = run()
-    for chunk in (4, 5, 16):
-        eng = run(prefill_chunk=chunk)
-        assert _streams(eng) == _streams(base), f"divergence at chunk={chunk}"
-        assert len(eng.finished) == len(lens)
-        # every prompt really went through the chunk path
-        expect = sum(-(-n // chunk) for n in lens)
-        assert eng.reg.counter("serve_prefill_chunks_total").get() == expect
-        assert eng.reg.counter("serve_decode_stall_iters").get() == 0
-        st = eng.kv.memory_stats()
-        assert st.pages_in_use == 0 and st.slots_in_use == 0
-
-
 def test_chunked_prefill_logits_bitwise_match_whole_prompt():
     """lm-level exactness: landing a prompt through lm.prefill_chunk in
     uneven chunks must leave the paged pools in a state whose decode logits

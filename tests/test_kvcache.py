@@ -36,96 +36,10 @@ def _ragged_requests(cfg, n, seed=5, lo=2, hi=10, new_lo=4, new_hi=9):
             for i in range(n)]
 
 
-# ------------------------------------------------------ exact logit parity ----
+# (Engine stream-parity, int8-parity, tight-pool and soak tests moved to
+# tests/test_kvcache_conformance.py — the cross-backend conformance matrix.)
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
-                         ids=["float32", "bfloat16"])
-def test_paged_logits_match_contiguous_exactly_ragged_8slot(dtype):
-    """Eight slots at eight different depths: the paged decode (scatter via
-    page table + gather over pages) must produce bitwise-identical logits to
-    the dense (B, Smax) layout — in both cache storage dtypes (bf16 rows
-    round identically through both layouts, so parity stays bitwise)."""
-    cfg, lm, params = small_lm()
-    B, S, pg = 8, 32, 8
-    rng = np.random.default_rng(7)
-    lens = [3, 11, 7, 1, 14, 5, 9, 2]
-    contig = lm.init_cache(B, S, dtype=dtype, backend="contiguous")
-    paged = lm.init_cache(B, S, dtype=dtype, backend="paged",
-                          page_size=pg)
-    for b, plen in enumerate(lens):
-        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
-        assert contig.alloc(b, plen + 4) == 0
-        assert paged.alloc(b, plen + 4, prefix=prompt) == 0
-        _, _, pc = lm.forward(params, {"tokens": jnp.asarray(prompt[None])},
-                              collect_cache=True)
-        contig.write_prefill(b, pc["layers"])
-        paged.write_prefill(b, pc["layers"])
-    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
-    positions = jnp.asarray(np.array(lens, np.int32))
-    lc, cc = lm.decode_step(params, toks, contig.decode_view(), positions)
-    lp, pc2 = lm.decode_step(params, toks, paged.decode_view(), positions)
-    np.testing.assert_array_equal(np.asarray(lc), np.asarray(lp))
-    # and again after the scatter-written token, through decode_view round-trip
-    contig.update(cc)
-    paged.update(pc2)
-    lc2, _ = lm.decode_step(params, toks, contig.decode_view(), positions + 1)
-    lp2, _ = lm.decode_step(params, toks, paged.decode_view(), positions + 1)
-    np.testing.assert_array_equal(np.asarray(lc2), np.asarray(lp2))
-
-
-def test_paged_engine_single_fused_dispatch_and_token_parity():
-    """Acceptance: ragged 8-slot workload through the paged engine keeps the
-    one-fused-dispatch-per-iteration invariant (serve_decode_dispatches_total
-    == iterations) and emits exactly the contiguous engine's tokens."""
-    cfg, lm, params = small_lm("qwen3-4b")
-    reqs = _ragged_requests(cfg, 12, seed=3)
-
-    paged = ServeEngine(lm, params, max_batch=8, max_seq=64,
-                        cache_backend="paged", page_size=8)
-    for r in reqs:
-        paged.submit(Request(r.id, r.prompt, max_new_tokens=r.max_new_tokens))
-    paged_out = {r.id: r.out_tokens for r in paged.run_until_drained()}
-    iters = paged.reg.counter("serve_iterations_total").get()
-    assert iters > 0
-    assert paged.reg.counter("serve_decode_dispatches_total").get() == iters
-
-    contig = ServeEngine(lm, params, max_batch=8, max_seq=64,
-                         cache_backend="contiguous")
-    for r in reqs:
-        contig.submit(Request(r.id, r.prompt,
-                              max_new_tokens=r.max_new_tokens))
-    contig_out = {r.id: r.out_tokens for r in contig.run_until_drained()}
-    assert paged_out == contig_out
-    assert len(paged_out) == 12
-
-
-def test_tight_pool_slot_reuse_parity():
-    """A pool holding only ~2 requests forces deferrals, page recycling, and
-    scratch-routed writes from freed slots.  Greedy outputs must still match
-    an unconstrained contiguous engine exactly — admission order and page
-    placement must never leak into a request's tokens."""
-    cfg, lm, params = small_lm()
-    reqs = _ragged_requests(cfg, 8, seed=13, lo=2, hi=8, new_lo=3, new_hi=6)
-    # each request needs at most ceil((7+5)/4)=3 pages; 6 usable pages
-    # admit at most ~2 requests at a time
-    tight = ServeEngine(lm, params, max_batch=4, max_seq=32,
-                        cache_backend="paged", page_size=4, num_pages=7)
-    for r in reqs:
-        tight.submit(Request(r.id, r.prompt, max_new_tokens=r.max_new_tokens))
-    tight_out = {r.id: r.out_tokens for r in tight.run_until_drained()}
-    assert len(tight_out) == 8
-    assert tight.reg.counter("serve_admission_deferred_total").get() > 0
-
-    contig = ServeEngine(lm, params, max_batch=4, max_seq=32,
-                         cache_backend="contiguous")
-    for r in reqs:
-        contig.submit(Request(r.id, r.prompt,
-                              max_new_tokens=r.max_new_tokens))
-    contig_out = {r.id: r.out_tokens for r in contig.run_until_drained()}
-    assert tight_out == contig_out
-
-
-# --------------------------------------------------- prefix-share lifecycle ----
+# ------------------------------------------------------- prefix sharing ----
 
 def test_prefix_sharing_refcount_and_free_lifecycle():
     cfg, lm, params = small_lm()
@@ -296,56 +210,6 @@ def test_mixed_bucket_prompts_prefill_one_dispatch_per_bucket():
 
 # ------------------------------------------------------------- engine soak ----
 
-def test_engine_soak_random_schedule_tight_pool_parity_and_telemetry():
-    """~200-step soak: a randomized submit schedule trickles ragged requests
-    into a pool tight enough to defer admissions and recycle pages/slots
-    continuously.  The paged engine must (a) emit exactly the streams an
-    unconstrained contiguous engine emits, and (b) keep its pool telemetry
-    inside invariants at every step: ``serve_kv_pages_in_use`` never exceeds
-    the pool and returns to 0 once drained."""
-    cfg, lm, params = small_lm()
-    rng = np.random.default_rng(41)
-    n_req, steps = 24, 200
-    # submit step -> requests arriving then (bursty: several per tick)
-    arrivals: dict = {}
-    for i in range(n_req):
-        arrivals.setdefault(int(rng.integers(0, 60)), []).append(
-            Request(i, rng.integers(0, cfg.vocab_size,
-                                    int(rng.integers(2, 9))).astype(np.int32),
-                    max_new_tokens=int(rng.integers(2, 6))))
-
-    def run(**kw):
-        eng = ServeEngine(lm, params, max_batch=4, max_seq=32, **kw)
-        pages_total = eng.kv.memory_stats().pages_total
-        gauge = eng.reg.gauge("serve_kv_pages_in_use")
-        for step in range(steps):
-            for r in arrivals.get(step, []):
-                eng.submit(Request(r.id, r.prompt,
-                                   max_new_tokens=r.max_new_tokens))
-            eng.step()
-            if kw.get("cache_backend") == "paged":
-                st = eng.kv.memory_stats()
-                assert 0 <= st.pages_in_use <= pages_total, (step, st)
-                assert 0 <= gauge.get() <= pages_total, (step, gauge.get())
-                assert st.bytes_reserved <= st.bytes_total
-        assert not eng.queue and all(r is None for r in eng.slot_req), \
-            "soak schedule must drain within the step budget"
-        if kw.get("cache_backend") == "paged":
-            eng.kv.verify()       # full sanitizer sweep on the drained pool
-        return {r.id: r.out_tokens for r in eng.finished}, eng
-
-    # 8 usable pages, footprints up to ceil((8+5)/4)=4 pages: 2-3 in flight
-    paged_out, paged_eng = run(cache_backend="paged", page_size=4,
-                               num_pages=9)
-    contig_out, _ = run(cache_backend="contiguous")
-    assert paged_out == contig_out
-    assert len(paged_out) == n_req
-    assert paged_eng.reg.counter("serve_admission_deferred_total").get() > 0
-    st = paged_eng.kv.memory_stats()
-    assert st.pages_in_use == 0 and st.slots_in_use == 0     # fully drained
-    assert paged_eng.reg.gauge("serve_kv_pages_in_use").get() == 0
-
-
 def test_encdec_rejects_paged_backend():
     cfg = dataclasses.replace(CONFIGS["seamless-m4t-large-v2"].reduced(),
                               dtype="float32")
@@ -394,103 +258,3 @@ def test_int8_rejected_off_paged_backend():
         lm.init_cache(2, 32, dtype=jnp.float32, kv_dtype="int8")
 
 
-@pytest.mark.parametrize("impl", ["gather", "pallas"])
-def test_int8_decode_logits_close_to_fp32_oracle(impl):
-    """Quality gate at the logit level: the ragged 8-slot workload decoded
-    off int8 pages must match the fp32 paged oracle within the quantization
-    tolerance — and pick the same greedy token everywhere — on both decode
-    impls, through two chained steps (the second consumes a quantized
-    scatter-written decode token)."""
-    cfg, lm, params = small_lm()
-    B, S, pg = 8, 32, 8
-    rng = np.random.default_rng(7)
-    lens = [3, 11, 7, 1, 14, 5, 9, 2]
-
-    def build(kv_dtype):
-        kv = lm.init_cache(B, S, dtype=jnp.float32, backend="paged",
-                           page_size=pg, decode_impl=impl,
-                           kv_dtype=kv_dtype)
-        rng2 = np.random.default_rng(7)
-        for b, plen in enumerate(lens):
-            prompt = rng2.integers(0, cfg.vocab_size, plen).astype(np.int32)
-            assert kv.alloc(b, plen + 4, prefix=prompt) == 0
-            _, _, pc = lm.forward(params,
-                                  {"tokens": jnp.asarray(prompt[None])},
-                                  collect_cache=True)
-            kv.write_prefill(b, pc["layers"])
-        return kv
-
-    oracle, quant = build("native"), build("int8")
-    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
-    pos = jnp.asarray(np.array(lens, np.int32))
-    for step in range(2):
-        lo, co = lm.decode_step(params, toks, oracle.decode_view(), pos,
-                                decode_impl=impl)
-        lq, cq = lm.decode_step(params, toks, quant.decode_view(), pos,
-                                decode_impl=impl)
-        lo, lq = np.asarray(lo), np.asarray(lq)
-        # the documented end-to-end bound (benchmarks.bench_serving
-        # asserts the same constant over its full workload)
-        assert np.abs(lq - lo).max() <= 0.05, (step, np.abs(lq - lo).max())
-        np.testing.assert_array_equal(
-            lo[..., :cfg.vocab_size].argmax(-1),
-            lq[..., :cfg.vocab_size].argmax(-1), err_msg=f"step {step}")
-        oracle.update(co), quant.update(cq)
-        pos = pos + 1
-
-
-def test_int8_engine_greedy_stream_parity_and_telemetry():
-    """End-to-end quality gate: int8 engines (both decode impls, plus
-    chunked prefill) emit bitwise the fp32 engine's greedy streams, and the
-    quant telemetry gauges report the format."""
-    cfg, lm, params = small_lm("qwen3-4b")
-    reqs = _ragged_requests(cfg, 10, seed=29)
-
-    def run(**kw):
-        eng = ServeEngine(lm, params, max_batch=4, max_seq=32,
-                          cache_backend="paged", page_size=4, **kw)
-        for r in reqs:
-            eng.submit(Request(r.id, r.prompt,
-                               max_new_tokens=r.max_new_tokens))
-        return {r.id: r.out_tokens for r in eng.run_until_drained()}, eng
-
-    ref, ref_eng = run()
-    assert len(ref) == 10
-    for kw in (dict(kv_dtype="int8"),
-               dict(kv_dtype="int8", decode_impl="pallas"),
-               dict(kv_dtype="int8", prefill_chunk=4)):
-        out, eng = run(**kw)
-        assert out == ref, kw
-        st = eng.kv.memory_stats()
-        assert st.kv_dtype == "int8" and st.bytes_scales > 0
-        assert eng.reg.gauge("serve_kv_quant_enabled").get() == 1
-        assert eng.reg.gauge("serve_kv_quant_scale_bytes").get() == \
-            st.bytes_scales
-        assert eng.reg.gauge("serve_kv_quant_bytes_saved").get() > 0
-        # quantized pool pins fewer bytes than the fp32 pool it replaces
-        assert st.bytes_total < ref_eng.kv.memory_stats().bytes_total
-    assert ref_eng.reg.gauge("serve_kv_quant_enabled").get() == 0
-
-
-def test_int8_prefix_sharing_and_tight_pool_parity():
-    """Admission control and prefix sharing are format-agnostic: a tight
-    int8 pool defers/recycles exactly like fp32 and still matches the
-    unconstrained contiguous engine's streams."""
-    cfg, lm, params = small_lm()
-    reqs = _ragged_requests(cfg, 8, seed=13, lo=2, hi=8, new_lo=3, new_hi=6)
-    tight = ServeEngine(lm, params, max_batch=4, max_seq=32,
-                        cache_backend="paged", page_size=4, num_pages=7,
-                        kv_dtype="int8")
-    for r in reqs:
-        tight.submit(Request(r.id, r.prompt, max_new_tokens=r.max_new_tokens))
-    tight_out = {r.id: r.out_tokens for r in tight.run_until_drained()}
-    assert len(tight_out) == 8
-    assert tight.reg.counter("serve_admission_deferred_total").get() > 0
-
-    contig = ServeEngine(lm, params, max_batch=4, max_seq=32,
-                         cache_backend="contiguous")
-    for r in reqs:
-        contig.submit(Request(r.id, r.prompt,
-                              max_new_tokens=r.max_new_tokens))
-    contig_out = {r.id: r.out_tokens for r in contig.run_until_drained()}
-    assert tight_out == contig_out

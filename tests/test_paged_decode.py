@@ -340,38 +340,6 @@ def test_freed_slot_scratch_page_rows_are_inert():
                                    **TOL)
 
 
-def test_engine_token_stream_parity_gather_vs_kernel():
-    """End-to-end: a ragged continuous-batching run on the paged engine must
-    emit identical greedy streams whichever decode_impl resolves the table,
-    including through deferrals and slot recycling on a tight pool."""
-    cfg, lm, params = small_lm("qwen3-4b")
-    rng = np.random.default_rng(23)
-    reqs = [(i, rng.integers(0, cfg.vocab_size,
-                             int(rng.integers(2, 10))).astype(np.int32),
-             int(rng.integers(3, 7))) for i in range(10)]
-
-    def run(impl):
-        eng = ServeEngine(lm, params, max_batch=4, max_seq=32,
-                          cache_backend="paged", page_size=4, num_pages=13,
-                          decode_impl=impl)
-        for i, p, n in reqs:
-            eng.submit(Request(i, p, max_new_tokens=n))
-        out = {r.id: r.out_tokens for r in eng.run_until_drained()}
-        return out, eng
-
-    g_out, g_eng = run("gather")
-    k_out, k_eng = run("pallas")
-    assert g_out == k_out and len(k_out) == 10
-    # one fused dispatch per iteration holds on the kernel path too
-    iters = k_eng.reg.counter("serve_iterations_total").get()
-    assert iters > 0
-    assert k_eng.reg.counter("serve_decode_dispatches_total").get() == iters
-    # and the transient gauge reflects the O(page) vs O(B*M*page) gap
-    g_t = g_eng.reg.gauge("serve_decode_transient_bytes").get()
-    k_t = k_eng.reg.gauge("serve_decode_transient_bytes").get()
-    assert 0 < k_t < g_t
-
-
 def test_decode_impl_rejected_values():
     cfg, lm, params = small_lm()
     with pytest.raises(AssertionError):

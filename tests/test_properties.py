@@ -393,6 +393,93 @@ def test_banker_never_deadlocks_under_random_preemption(seed):
     assert not pending and not covered, (pending, covered)
 
 
+# -------------------------------------------------------------- host tier ----
+
+# op stream over a store-backed pool: evict-to-host happens implicitly when
+# a free/evict drops a registered page's last reference; prefetch happens
+# implicitly when a later alloc hash-hits a host-resident prefix; "drain"
+# forces the async offload queue to materialize at an arbitrary point
+host_ops_st = st.lists(
+    st.tuples(st.sampled_from(["alloc", "alloc_chunked", "extend", "free",
+                               "evict", "drain"]),
+              st.integers(0, 3),                  # slot
+              st.integers(1, 24),                 # footprint positions
+              st.integers(0, 3),                  # prefix choice
+              st.sampled_from(["a", "b", "c"])),  # tenant ("a" is quota'd)
+    min_size=1, max_size=30)
+
+
+@given(ops=host_ops_st, cap=st.integers(1, 6), qa=st.integers(2, 8))
+@settings(max_examples=30, deadline=None)
+def test_host_tier_invariants_hold_under_random_op_streams(ops, cap, qa):
+    """Random alloc/alloc_chunked/extend/free/evict/drain streams against a
+    store-backed pool with a deliberately tiny host tier (LRU churn on
+    nearly every offload): refcounts, quota charges and banker safety never
+    break, ``PagedCache.verify()`` — which cross-checks the host tier's
+    slab/entry bookkeeping and the device<->host byte math — passes after
+    every single op, host residency never exceeds tier capacity, and the
+    store's counters stay monotonic (the engine exports them as Prometheus
+    counters by delta, so one decrement corrupts telemetry forever)."""
+    from repro.serve.kvcache import PagedCache
+    from repro.serve.offload import PrefixStore
+    store = PrefixStore(cap)
+    kv = PagedCache(_alloc_lm(), 4, 24, dtype=jnp.float32, page_size=4,
+                    num_pages=12, prefix_store=store)
+    kv.set_quota("a", qa)
+    # overlapping prefixes: runs share leading pages, so offloaded pages
+    # from one prompt are prefetch hits for another
+    prefixes = [np.arange(12, dtype=np.int32),
+                np.arange(12, dtype=np.int32) + 1,
+                np.concatenate([np.arange(8, dtype=np.int32),
+                                np.arange(70, 74, dtype=np.int32)]),
+                np.arange(4, dtype=np.int32)]
+    footprint = {}
+    prev_stats = store.stats()
+    for kind, slot, length, pid, tenant in ops:
+        length = min(length, kv.S)
+        if kind in ("alloc", "alloc_chunked"):
+            if kv._slot_pages[slot]:
+                kv.free(slot)
+                footprint.pop(slot, None)
+            pref = prefixes[pid][:length]
+            if kind == "alloc":
+                got = kv.alloc(slot, length, prefix=pref, tenant=tenant)
+            else:
+                got = kv.alloc_chunked(slot, length, min(4, length),
+                                       prefix=pref, tenant=tenant)
+            if got is not None:
+                footprint[slot] = length
+        elif kind == "extend" and kv._slot_need[slot] > 0:
+            have = len(kv._slot_pages[slot]) * kv.page
+            kv.extend(slot, min(have + kv.page, footprint[slot]))
+        elif kind in ("free", "evict") and kv._slot_pages[slot]:
+            (kv.free if kind == "free" else kv.evict)(slot)
+            footprint.pop(slot, None)
+        elif kind == "drain":
+            kv.drain_offloads()
+        # --- invariants after EVERY op ---
+        kv.verify()    # refcounts, banker safety, host slab/entry/byte math
+        assert kv.tenant_pages("a") <= qa
+        assert store.pages_in_use() <= cap
+        stats = store.stats()
+        assert all(stats[k] >= prev_stats[k] for k in stats), \
+            (prev_stats, stats)
+        prev_stats = stats
+        st_ = kv.memory_stats()          # memory_stats drains, then reports
+        assert st_.host_pages_in_use == store.pages_in_use()
+        assert st_.host_bytes == store.bytes_in_use()
+    for slot in range(4):
+        if kv._slot_pages[slot]:
+            kv.free(slot)
+    kv.drain_offloads()
+    kv.verify()
+    # drained pool: no device pages held, no residual charges; host pages
+    # legitimately stay warm (that is the tier's purpose) but bounded
+    assert kv.memory_stats().pages_in_use == 0
+    assert kv._tenant_pages == {}
+    assert store.pages_in_use() <= cap
+
+
 # ---------------------------------------------------------------- storage ----
 
 @given(cap=st.integers(2, 20), n=st.integers(1, 40))

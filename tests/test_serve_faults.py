@@ -22,9 +22,9 @@ import pytest
 from repro.configs import CONFIGS
 from repro.models import LM
 from repro.serve import (CacheInvariantError, EngineStuckError, FaultEvent,
-                         FaultPlan, PriorityClass, Request, SamplingParams,
-                         ServeEngine, TenancyConfig, TenantSpec,
-                         TransientDispatchError)
+                         FaultPlan, PrefixStore, PriorityClass, Request,
+                         SamplingParams, ServeEngine, TenancyConfig,
+                         TenantSpec, TransientDispatchError)
 
 
 @pytest.fixture(scope="module")
@@ -290,6 +290,124 @@ def test_random_fault_soak_always_drains(model):
     assert injected >= 1
     assert eng.reg.gauge("serve_streams_quarantined").get() == 0
     eng.kv.verify()
+
+
+# ------------------------------------------------- host-tier faults ----
+
+def test_host_poisoned_page_quarantined_at_prefetch(model):
+    """Corruption in the warm tier surfaces as recompute, never as a
+    poisoned stream: poison a host-resident prefix page, and the next
+    hash-hitting admission's prefetch finite-check catches it *before*
+    the page is registered as landed — the entry is quarantined, the
+    prefix recomputes, and the stream stays bitwise identical to a
+    tier-less engine."""
+    cfg, lm, params = model
+    prefix = np.arange(100, 108, dtype=np.int32)    # 2 full pages @ page=4
+
+    def reqs(ids):
+        return [Request(i, np.concatenate(
+                    [prefix, np.asarray([(i * 7 + 3) % cfg.vocab_size],
+                                        np.int32)]),
+                        max_new_tokens=5) for i in ids]
+
+    base = _drain(_engine(lm, params), reqs(range(4)))
+    eng = _engine(lm, params, host_pages=16, verify_cache=True)
+    # wave 1: sharers complete and free -> prefix pages offload to host
+    out1 = _drain(eng, reqs([0, 1]))
+    assert out1[0] == base[0] and out1[1] == base[1]
+    eng.kv.drain_offloads()
+    keys = [eng.kv._key(prefix, i) for i in range(2)]
+    assert all(eng.kv.store.has(k) for k in keys)
+    for k in keys:
+        assert eng.kv.store.poison(k)
+    # wave 2: the hash hit prefetches, trips the finite check, quarantines
+    out2 = _drain(eng, reqs([2, 3]))
+    assert out2[2] == base[2] and out2[3] == base[3]
+    stats = eng.kv.store.stats()
+    assert stats["poisoned"] >= 1
+    # the poisoned entry was dropped; the wave-2 recompute re-offloaded
+    # the prefix, so the key is resident again — with clean bytes
+    got = eng.kv.store.lookup(keys[0])
+    assert got is not None
+    assert all(np.isfinite(np.asarray(v, np.float32)).all()
+               for v in got.values()
+               if np.issubdtype(v.dtype, np.floating))
+    assert eng.reg.gauge("serve_streams_quarantined").get() == 0
+    eng.kv.verify()
+
+
+def test_prefix_store_digest_collision_is_miss_never_crosstalk(model):
+    """The store indexes by a short digest but verifies the full prefix
+    key on every lookup: force *every* digest to collide and the store
+    must degrade to misses/replacements — another prefix's KV bytes are
+    never served — while engine streams stay bitwise clean."""
+    cfg, lm, params = model
+
+    class CollidingStore(PrefixStore):
+        def _digest(self, key):
+            return b"\x00"                    # all keys collide
+
+    # unit pin: collision on lookup is a miss, on put a replacement
+    store = CollidingStore(8)
+    store.bind({"x": ((2,), np.float32)})
+    a, b = b"prefix-a", b"prefix-b"
+    store.put(a, {"x": np.ones(2, np.float32)})
+    assert store.lookup(b) is None            # full-key mismatch: miss
+    assert store.stats()["collisions"] == 1
+    store.put(b, {"x": np.full(2, 2.0, np.float32)})   # replaces a
+    assert store.lookup(a) is None
+    got = store.lookup(b)
+    np.testing.assert_array_equal(got["x"], np.full(2, 2.0, np.float32))
+    store.verify()
+
+    # engine pin: a fully-colliding store never changes any stream
+    def reqs():
+        out = _requests(cfg)
+        for r in out:       # two recurring prefixes so offloads collide
+            r.prompt = np.concatenate(
+                [np.arange(8, dtype=np.int32) + (r.id % 2) * 50,
+                 r.prompt[:2]])
+        return out
+
+    base = _drain(_engine(lm, params), reqs())
+    eng = _engine(lm, params, prefix_store=CollidingStore(16),
+                  verify_cache=True)
+    assert _drain(eng, reqs()) == base
+    assert eng.kv.store.stats()["collisions"] >= 1
+    assert eng.kv.store.pages_in_use() <= 1   # one digest -> one entry
+    eng.kv.verify()
+
+
+def test_evict_while_shared_never_offloads_live_pages(model):
+    """The evict-while-shared race: preempting one sharer of a prefix
+    while another still decodes from it must NOT offload the pages (their
+    refcount is still positive — offload of a live page would let the
+    host copy go stale).  Offload happens only when the *last* sharer
+    frees; a later admission then prefetches the pages back."""
+    cfg, lm, params = model
+    kv = lm.init_cache(4, 32, dtype=jnp.float32, backend="paged",
+                       page_size=4, num_pages=16, host_pages=8)
+    prompt = np.arange(8, dtype=np.int32)
+    _, _, pc = lm.forward(params, {"tokens": jnp.asarray(prompt[None])},
+                          collect_cache=True)
+    assert kv.alloc(0, 12, prefix=prompt) == 0
+    kv.write_prefill(0, pc["layers"])
+    assert kv.alloc(1, 12, prefix=prompt) == 8       # shares both pages
+    shared = list(kv._slot_pages[1][:2])
+    kv.evict(0)                     # preemption while slot 1 still shares
+    kv.drain_offloads()
+    assert kv.store.pages_in_use() == 0, \
+        "evicting one sharer offloaded pages another slot still reads"
+    assert all(kv._ref[p] == 1 for p in shared)
+    assert all(p in kv._page_to_hash for p in shared)   # still registered
+    kv.verify()
+    kv.free(1)                      # last reference: NOW they offload
+    kv.drain_offloads()
+    assert kv.store.pages_in_use() == 2
+    assert kv.store.stats()["offloads"] == 2
+    assert kv.alloc(2, 12, prefix=prompt) == 8       # host prefetch hit
+    assert kv.store.stats()["hits"] == 2
+    kv.verify()
 
 
 # --------------------------------------------- stuck-stream surfacing ----
